@@ -1,0 +1,23 @@
+"""Shared benchmark helpers: CSV rows `name,us_per_call,derived`."""
+import math
+import sys
+import time
+
+
+def geomean(xs):
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn, *args, warmup=1, iters=5):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6, out

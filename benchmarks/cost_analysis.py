@@ -1,0 +1,35 @@
+"""§V-C cost analysis: SLC-mode flash vs LPDDR5 for weights + KV storage."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import flashsim as fs
+
+TLC_PER_GB = 0.11          # YTMC 128-layer TLC [69]
+SLC_DENSITY_RATIO = 8.5 / 1.8
+AREA_OVERHEAD = 1.22       # page buffers
+YIELD = 0.58 / 0.80        # conservative vs 80% base
+LPDDR5_PER_GB = 4.62       # [56]
+
+
+def run():
+    slc_per_gb = TLC_PER_GB * SLC_DENSITY_RATIO
+    emit("vC/slc_per_gb", 0.0, f"${slc_per_gb:.2f}/GB (paper $0.52)")
+    effective = slc_per_gb * AREA_OVERHEAD / YIELD
+    emit("vC/effective_per_gb", 0.0, f"${effective:.2f}/GB (paper $0.72)")
+
+    die_gb = fs.FlashDie().capacity / 1e9
+    n_dies = 8
+    flash_cost = effective * die_gb * n_dies
+    emit("vC/kvnand_d_4+4_flash_cost", 0.0,
+         f"${flash_cost:.2f} for {n_dies} dies (paper ~$92.16)")
+
+    # same weight+KV capacity in LPDDR5
+    cfg = get_config("llama3.1-70b")
+    cap_gb = die_gb * n_dies
+    dram_cost = LPDDR5_PER_GB * cap_gb
+    emit("vC/equivalent_lpddr5_cost", 0.0,
+         f"${dram_cost:.2f} ({dram_cost / flash_cost:.1f}x flash; "
+         f"paper >2x / $295.68)")
+
+
+if __name__ == "__main__":
+    run()

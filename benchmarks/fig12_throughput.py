@@ -1,0 +1,46 @@
+"""Fig 12: decode throughput of Base-1/Base-2/KVNAND-C/KVNAND-D across the
+five paper models × {1K, 10K, 100K} contexts (+128 for the headline
+geomean).  derived column: tokens/s (0 = OOM)."""
+from benchmarks.common import emit, geomean
+from repro.configs import get_config
+from repro.core import flashsim as fs
+
+MODELS = ["opt-30b", "llama2-7b", "llama3.1-8b", "llama3.1-70b",
+          "mixtral-8x7b"]
+SEQS = [128, 1_000, 10_000, 100_000]
+W, A = 16, 16   # paper evaluates full-precision models
+
+
+def best_kvnand_d(cfg, seq):
+    cands = [fs.kvnand_d(g1, 8 - g1, W, A) for g1 in range(1, 8)]
+    return max(fs.decode_throughput(s, cfg, seq) for s in cands)
+
+
+def run():
+    speedups = {s: [] for s in SEQS}
+    for m in MODELS:
+        cfg = get_config(m)
+        for seq in SEQS:
+            rows = {
+                "base1": fs.decode_throughput(fs.base1(W, A), cfg, seq),
+                "base2": fs.decode_throughput(fs.base2(W, A), cfg, seq),
+                "kvnand_c16": fs.decode_throughput(fs.kvnand_c(16, W, A),
+                                                   cfg, seq),
+                "kvnand_d": best_kvnand_d(cfg, seq),
+            }
+            for sysname, tp in rows.items():
+                lat_us = 1e6 / tp if tp > 0 else 0.0
+                emit(f"fig12/{m}/{seq}/{sysname}", lat_us,
+                     f"{tp:.2f} tok/s")
+            best = max(rows["kvnand_c16"], rows["kvnand_d"])
+            if rows["base1"] > 0 and best > 0:
+                speedups[seq].append(best / rows["base1"])
+    for seq, target in zip(SEQS, (1.98, 1.94, 2.05, None)):
+        g = geomean(speedups[seq])
+        note = f"geomean_vs_base1={g:.2f}" + \
+            (f" (paper {target})" if target else " (base1 OOM @100K)")
+        emit(f"fig12/geomean/{seq}", 0.0, note)
+
+
+if __name__ == "__main__":
+    run()

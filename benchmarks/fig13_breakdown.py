@@ -1,0 +1,25 @@
+"""Fig 13: decode-latency breakdown (LLaMA3.1-8B @ 1K and 10K)."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import flashsim as fs
+
+
+def run():
+    cfg = get_config("llama3.1-8b")
+    for seq in (1_000, 10_000):
+        for sysf in (fs.base1(16, 16), fs.base2(16, 16),
+                     fs.kvnand_c(16, 16, 16), fs.kvnand_d(8, 8, 16, 16)):
+            b = fs.decode_token_latency(sysf, cfg, seq)
+            total = b.total
+            for part in ("qkv", "attention", "o_proj", "ffn", "lm_head",
+                         "kv_write", "transfer"):
+                v = getattr(b, part)
+                emit(f"fig13/{sysf.name}/{seq}/{part}", v * 1e6,
+                     f"{100 * v / total:.1f}% of {total * 1e3:.2f}ms")
+            emit(f"fig13/{sysf.name}/{seq}/overlap_saved",
+                 b.overlap_saved * 1e6,
+                 f"hg pipeline recovers {100 * b.overlap_saved / total:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

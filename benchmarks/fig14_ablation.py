@@ -1,0 +1,33 @@
+"""Fig 14: ablations — (a) HG pipelining in KVNAND-D, (b) page-level KV
+mapping in KVNAND-C (paper: 82.4% @10K; 1.9% @100K MHA-30B)."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import flashsim as fs
+
+
+def run():
+    # (a) HG parallelism, normalized latency vs no-dataflow-opt baseline
+    for m in ("llama2-7b", "llama3.1-8b", "opt-30b"):
+        cfg = get_config(m)
+        for seq in (1_000, 10_000, 100_000):
+            on = fs.decode_token_latency(
+                fs.kvnand_d(4, 4, 16, 16, hg=True), cfg, seq).total
+            off = fs.decode_token_latency(
+                fs.kvnand_d(4, 4, 16, 16, hg=False), cfg, seq).total
+            emit(f"fig14a/hg_pipeline/{m}/{seq}", on * 1e6,
+                 f"normalized={100 * on / off:.1f}% (paper 82.4% @10K)")
+    # (b) page mapping: attention time with/without §IV-D mapping
+    for m in ("opt-30b", "llama3.1-8b"):
+        cfg = get_config(m)
+        for seq in (10_000, 100_000):
+            t_on, _ = fs._attn_terms(fs.kvnand_c(16, 16, 16, mapping=True),
+                                     cfg, seq)
+            t_off, _ = fs._attn_terms(
+                fs.kvnand_c(16, 16, 16, mapping=False), cfg, seq)
+            emit(f"fig14b/page_mapping/{m}/{seq}", t_on * 1e6,
+                 f"normalized={100 * t_on / t_off:.2f}% (paper 1.9% "
+                 f"@100K MHA-30B)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Fig 15: DSE latency heatmaps — 8-die configs (G1 = 1..7 + C-8) ×
+sequence lengths × quantization (W8A8 / W4A16) × {30B MHA, 70B GQA}.
+Blank (OOM) cells print derived=OOM."""
+import math
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import dse
+
+SEQS = [1_000, 2_000, 5_000, 10_000, 50_000, 100_000]
+
+
+def run():
+    for model in ("opt-30b", "llama3.1-70b"):
+        cfg = get_config(model)
+        for wbits, abits, tag in ((8, 8, "w8a8"), (4, 16, "w4a16")):
+            grid = dse.heatmap(cfg, SEQS, total_dies=8, wbits=wbits,
+                               abits=abits)
+            # per-seq best config (the red cells of Fig 15)
+            for seq in SEQS:
+                best = min(((lat[seq], name) for name, lat in grid.items()
+                            if not math.isinf(lat[seq])), default=None)
+                if best is None:
+                    emit(f"fig15/{model}/{tag}/{seq}/best", 0.0, "OOM")
+                else:
+                    emit(f"fig15/{model}/{tag}/{seq}/best", best[0] * 1e6,
+                         best[1])
+            n_oom = sum(math.isinf(v) for lat in grid.values()
+                        for v in lat.values())
+            emit(f"fig15/{model}/{tag}/oom_cells", 0.0,
+                 f"{n_oom}/{len(grid) * len(SEQS)} blank")
+        t = dse.takeaways(get_config("opt-30b"), get_config("llama3.1-70b"))
+        emit(f"fig15/{model}/takeaways", 0.0,
+             ";".join(f"{k}={v}" for k, v in t.items()))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig 16: per-token decode energy (LLaMA2-7B, LLaMA3.1-70B) vs context."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import flashsim as fs
+
+
+def run():
+    for m in ("llama2-7b", "llama3.1-70b"):
+        cfg = get_config(m)
+        for seq in (1_000, 10_000, 30_000, 100_000):
+            e_b1 = fs.decode_token_energy(fs.base1(16, 16), cfg, seq)
+            e_b2 = fs.decode_token_energy(fs.base2(16, 16), cfg, seq)
+            e_kc = fs.decode_token_energy(fs.kvnand_c(16, 16, 16), cfg, seq)
+            e_kd = fs.decode_token_energy(fs.kvnand_d(8, 8, 16, 16), cfg,
+                                          seq)
+            best = min(e_kc["total"], e_kd["total"])
+            for name, e in (("base1", e_b1), ("base2", e_b2),
+                            ("kvnand_c16", e_kc), ("kvnand_d8+8", e_kd)):
+                emit(f"fig16/{m}/{seq}/{name}", 0.0,
+                     f"{e['total'] * 1e3:.2f} mJ/token")
+            if not fs.is_oom(fs.base1(16, 16), cfg, seq):
+                emit(f"fig16/{m}/{seq}/ratio_vs_base1", 0.0,
+                     f"{best / e_b1['total']:.2f}x (paper 0.75x@10K 7B)")
+
+
+if __name__ == "__main__":
+    run()

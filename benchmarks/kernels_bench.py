@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: wall-clock of the jnp refs + Pallas-interpret
+parity checks on CPU (TPU wall-time is out of scope in this container —
+kernel perf is reasoned structurally in EXPERIMENTS.md §Perf)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.quant import quantize_weight
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention_partial
+from repro.kernels.quant_gemv import quant_gemv
+
+
+def run():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    # flash attention ref (prefill-block scale)
+    B, S, H, K, dh = 2, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, dh), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v, impl="ref"))
+    us, _ = time_fn(lambda: jax.block_until_ready(f(q, k, v)))
+    flops = 4 * B * S * S * H * dh * 0.5
+    emit("kernels/flash_attention_ref_1k", us,
+         f"{flops / us / 1e3:.1f} GFLOP/s cpu")
+
+    # paged decode attention
+    NP, T = 64, 64
+    kp = jax.random.normal(ks[1], (B, K, NP, T, dh), jnp.bfloat16)
+    vp = jax.random.normal(ks[2], (B, K, NP, T, dh), jnp.bfloat16)
+    base = jnp.broadcast_to((jnp.arange(NP) * T)[None], (B, NP)
+                            ).astype(jnp.int32)
+    qd = jax.random.normal(ks[3], (B, H, dh), jnp.bfloat16)
+    length = jnp.full((B,), NP * T, jnp.int32)
+    g = jax.jit(lambda *a: paged_attention_partial(*a, impl="ref"))
+    us, _ = time_fn(lambda: jax.block_until_ready(
+        g(qd, kp, vp, base, length)))
+    kv_bytes = 2 * B * K * NP * T * dh * 2
+    emit("kernels/paged_attention_ref_4k", us,
+         f"{kv_bytes / us / 1e3:.1f} GB/s kv stream cpu")
+
+    # quantized GEMV
+    D, F = 1024, 4096
+    w = jax.random.normal(ks[0], (D, F)) * 0.05
+    x = jax.random.normal(ks[1], (4, D))
+    for scheme in ("w8a8", "w4a16"):
+        qw = quantize_weight(w, scheme)
+        h = jax.jit(lambda x: quant_gemv(x, qw, impl="ref"))
+        us, _ = time_fn(lambda: jax.block_until_ready(h(x)))
+        emit(f"kernels/quant_gemv_{scheme}", us,
+             f"{qw.q.size * qw.q.dtype.itemsize / us / 1e3:.1f} GB/s "
+             f"weight stream cpu")
+
+    # wkv6 chunked vs recurrent
+    from repro.models.rwkv6 import wkv_chunked, wkv_recurrent
+    Bw, Sw, Hw, dhw = 2, 512, 4, 64
+    kk = jax.random.split(jax.random.PRNGKey(1), 6)
+    r = jax.random.normal(kk[0], (Bw, Sw, Hw, dhw))
+    kkv = jax.random.normal(kk[1], (Bw, Sw, Hw, dhw))
+    vv = jax.random.normal(kk[2], (Bw, Sw, Hw, dhw))
+    lw = -0.05 - 4.0 * jax.nn.sigmoid(
+        jax.random.normal(kk[3], (Bw, Sw, Hw, dhw)))
+    u = jax.random.normal(kk[4], (Hw, dhw)) * 0.5
+    s0 = jnp.zeros((Bw, Hw, dhw, dhw))
+    for name, fn in (("recurrent", wkv_recurrent), ("chunked", wkv_chunked)):
+        jfn = jax.jit(lambda *a: fn(*a)[0])
+        us, _ = time_fn(lambda: jax.block_until_ready(
+            jfn(r, kkv, vv, lw, u, s0)))
+        emit(f"kernels/wkv6_{name}_512", us, f"{Sw} tokens")
+
+
+if __name__ == "__main__":
+    run()

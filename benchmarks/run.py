@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        cost_analysis, fig5_reliability, fig12_throughput, fig13_breakdown,
+        fig14_ablation, fig15_dse, fig16_energy, kernels_bench,
+    )
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig12", fig12_throughput), ("fig13", fig13_breakdown),
+        ("fig14", fig14_ablation), ("fig15", fig15_dse),
+        ("fig16", fig16_energy), ("fig5", fig5_reliability),
+        ("cost", cost_analysis), ("kernels", kernels_bench),
+    ]
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Serving example: batched requests with continuous batching over the
+paged KVNAND engine, engine variant chosen by the Track-A DSE.
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+from repro.launch.serve import serve
+
+
+def main():
+    done = serve(["--arch", "qwen1.5-0.5b", "--reduced",
+                  "--requests", "6", "--max-new", "12", "--slots", "3",
+                  "--max-context", "128", "--temperature", "0.8"])
+    assert len(done) == 6
+    print("serve_paged example complete")
+
+
+if __name__ == "__main__":
+    main()

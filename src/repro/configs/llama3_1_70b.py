@@ -1,0 +1,16 @@
+"""LLaMA3.1-70B — paper evaluation model (GQA). [arXiv:2407.21783]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama3.1-70b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28672,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    source="arXiv:2407.21783 (paper eval model)",
+))

@@ -1,0 +1,614 @@
+"""KVNAND engine — prefill + decode with paged KV, compact/discrete plans.
+
+The decode step realizes the paper's Figure 7(b) on a TPU mesh:
+
+  * every memory-bound GEMV (QKV gen, Logit, Attend, O-proj, FFN) runs where
+    its bytes live — weights TP-sharded over `model`, KV pages sequence-
+    striped over `model` (± spare batch axes for batch-1 long context);
+  * Logit/Attend are per-shard partials over local pages, merged by a
+    log-sum-exp combine (the paper's NPU softmax-aggregation, Fig 8 ❺–❼);
+  * `variant="discrete"` pipelines head groups (Fig 9(c)/10(a)): the q-GEMV
+    of head-group i+1 is issued in the same scan step as the attention of
+    head-group i with no data dependence between them — XLA's latency-hiding
+    scheduler overlaps them exactly as the G1/G2 dies do.  On a TPU the
+    paper's *spatial* G1/G2 split would idle half the MXUs (flash PEs are
+    fixed-function; TPUs are not), so the split is temporal — see DESIGN.md.
+  * `variant="compact"` fuses all heads into single larger GEMVs (max TP,
+    Fig 10(b)).
+
+Memory discipline (§Perf iteration 1): KV pools and recurrent states are
+scan CARRIES updated in place at a traced layer index — never scan xs/ys.
+Threading pools through xs/ys made XLA rewrite the full per-layer pool
+through the ys-stacking buffer every step (~70 MB of copy traffic per layer
+against 4 KB of appended KV at qwen1.5-0.5b/decode_32k scale).
+
+Layer heterogeneity (gemma3 5:1 local:global, hymba sparse-global) scans
+over repeating layer *groups*; global/window pools are indexed by per-group
+base offsets carried as scanned index arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import EngineConfig, ModelConfig
+from repro.core import paged_kv, seqpar
+from repro.core.paged_kv import DecodeCache
+from repro.kernels.paged_attention import paged_attention_partial
+from repro.models import attention as attn_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dense, embed_lookup, mlp, moe, rms_norm
+from repro.models.transformer import Runtime, embed_inputs, lm_head_logits
+
+STATE_LEAVES = ("rwkv_state", "rwkv_shift", "rwkv_shift2", "ssm_state",
+                "conv_tail")
+POOL_G = ("k_pages_g", "v_pages_g")
+POOL_W = ("k_pages_w", "v_pages_w")
+
+
+# ---------------------------------------------------------------------------
+# Mesh planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    batch_axes: Tuple[str, ...] = ()
+    page_axes_g: Tuple[str, ...] = ()
+    page_axes_w: Tuple[str, ...] = ()
+
+
+def _axes_size(mesh: Optional[Mesh], axes) -> int:
+    if mesh is None:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def plan_sharding(mesh: Optional[Mesh], batch: int,
+                  np_g_raw: int) -> ShardPlan:
+    """Pick batch vs page mesh axes.  Batch-1 long context pushes spare
+    data/pod axes onto the global page dimension (up to 512-way striping)."""
+    if mesh is None or mesh.size == 1:
+        return ShardPlan()
+    batch_axes: List[str] = []
+    spare: List[str] = []
+    rem = batch
+    for a in ("pod", "data"):
+        if a not in mesh.shape:
+            continue
+        if rem % mesh.shape[a] == 0 and rem >= mesh.shape[a]:
+            batch_axes.append(a)
+            rem //= mesh.shape[a]
+        else:
+            spare.append(a)
+    page_axes_g: List[str] = []
+    n = mesh.shape["model"]
+    for a in spare:
+        if np_g_raw >= n * mesh.shape[a]:
+            page_axes_g.append(a)
+            n *= mesh.shape[a]
+    page_axes_g.append("model")
+    return ShardPlan(tuple(batch_axes), tuple(page_axes_g), ("model",))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class KVNANDEngine:
+    def __init__(self, cfg: ModelConfig, eng: Optional[EngineConfig] = None,
+                 rt: Optional[Runtime] = None, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.eng = eng or EngineConfig()
+        self.rt = rt or Runtime()
+        self.mesh = mesh
+        self.period, self.pattern = paged_kv.layer_pattern(cfg)
+        # per-period static offsets into the global/window pools
+        self._g_off = []
+        self._w_off = []
+        g = w = 0
+        for is_glob in self.pattern:
+            use_window = (cfg.window is not None) and not is_glob
+            self._g_off.append(g)
+            self._w_off.append(w)
+            if cfg.family != "ssm":
+                if use_window:
+                    w += 1
+                else:
+                    g += 1
+        self.g_per_group, self.w_per_group = g, w
+
+    # ------------------------------------------------------------------
+    # cache construction
+    # ------------------------------------------------------------------
+    def plan(self, batch: int, max_context: int) -> ShardPlan:
+        return plan_sharding(
+            self.mesh, batch,
+            paged_kv.ceil_div(max_context, self.eng.page_tokens))
+
+    def _cache_kw(self, batch: int, max_context: int, enc_len: int):
+        plan = self.plan(batch, max_context)
+        return dict(dtype=jnp.dtype(self.eng.kv_dtype), enc_len=enc_len,
+                    page_shards_g=_axes_size(self.mesh, plan.page_axes_g),
+                    page_shards_w=_axes_size(self.mesh, plan.page_axes_w))
+
+    def init_cache(self, batch: int, max_context: int,
+                   enc_len: int = 0) -> DecodeCache:
+        return paged_kv.init_cache(self.cfg, self.eng, batch, max_context,
+                                   **self._cache_kw(batch, max_context,
+                                                    enc_len))
+
+    def abstract_cache(self, batch: int, max_context: int,
+                       enc_len: int = 0) -> DecodeCache:
+        return paged_kv.abstract_cache(self.cfg, self.eng, batch, max_context,
+                                       **self._cache_kw(batch, max_context,
+                                                        enc_len))
+
+    # ------------------------------------------------------------------
+    # paged attention dispatch (single device vs sharded combine)
+    # ------------------------------------------------------------------
+    def _paged_attn(self, q, kp, vp, base, length, plan: ShardPlan,
+                    pool: str, window):
+        page_axes = plan.page_axes_g if pool == "g" else plan.page_axes_w
+        if self.mesh is None or self.mesh.size == 1 or not page_axes:
+            o, _, _ = paged_attention_partial(
+                q, kp, vp, base, length, window=window,
+                impl=self.eng.attn_impl)
+            return o
+        return seqpar.paged_decode_attention_sharded(
+            q, kp, vp, base, length, self.mesh, window=window,
+            batch_axes=plan.batch_axes, page_axes=page_axes,
+            impl=self.eng.attn_impl)
+
+    # ------------------------------------------------------------------
+    # in-place pool ops (pools carried through the layer scan)
+    # ------------------------------------------------------------------
+    def _append_token(self, pool, layer, phys, slot, val):
+        """pool: [L, B, K, NP, T, dh]; write one token's K or V in place.
+
+        Uniform-length fast path: all sequences advance in lockstep (static
+        decode batching — every dry-run cell), so the append is ONE
+        dynamic_update_slice.  The general per-sequence path lowers to a
+        scatter, which XLA implements with whole-pool layout transposes
+        (measured 3× pool traffic per layer) — only the ragged continuous-
+        batching scheduler pays it.
+        """
+        if self.eng.uniform_lengths:
+            upd = val[None, :, :, None, None, :].astype(pool.dtype)
+            zero = jnp.zeros((), jnp.int32)
+            return jax.lax.dynamic_update_slice(
+                pool, upd, (layer, zero, zero, phys[0], slot[0], zero))
+        B = val.shape[0]
+        b_idx = jnp.arange(B)
+        return pool.at[layer, b_idx, :, phys, slot].set(
+            val.astype(pool.dtype), mode="drop")
+
+    @staticmethod
+    def _layer_slice(pool, layer):
+        return jax.lax.dynamic_index_in_dim(pool, layer, 0, keepdims=False)
+
+    # ------------------------------------------------------------------
+    # per-layer attention (compact vs discrete)
+    # ------------------------------------------------------------------
+    def _attend_compact(self, pl_, x_norm, kp, vp, base, lengths, plan,
+                        pool, window):
+        """Fused QKV gen + attention (KVNAND-C, Fig 10b).  kp/vp are the
+        already-appended layer slices."""
+        q, _, _ = attn_mod.project_qkv(pl_["attn"], self.cfg, x_norm,
+                                       lengths[:, None])
+        return self._paged_attn(q[:, 0], kp, vp, base, lengths + 1, plan,
+                                pool, window)
+
+    def _attend_discrete(self, pl_, x_norm, kp, vp, base, lengths, plan,
+                         pool, window):
+        """Head-group pipelined attention (KVNAND-D, Fig 10a): q-GEMV of
+        group i+1 is independent of group i's attention -> overlapped."""
+        cfg = self.cfg
+        B = x_norm.shape[0]
+        K = cfg.n_kv_heads
+        x_tok = x_norm[:, 0]
+
+        def body(q_cur, i):
+            q_next = attn_mod.project_q_group(
+                pl_["attn"], cfg, x_tok, jnp.minimum(i + 1, K - 1), lengths)
+            # slice head group i on the K dim directly (no pool transpose)
+            kp_i = jax.lax.dynamic_slice_in_dim(kp, i, 1, 1)
+            vp_i = jax.lax.dynamic_slice_in_dim(vp, i, 1, 1)
+            o = self._paged_attn(q_cur, kp_i, vp_i, base, lengths + 1,
+                                 plan, pool, window)         # [B, G, dh]
+            return q_next, o
+
+        q0 = attn_mod.project_q_group(pl_["attn"], cfg, x_tok,
+                                      jnp.zeros((), jnp.int32), lengths)
+        _, outs = jax.lax.scan(body, q0, jnp.arange(K))
+        return outs.transpose(1, 0, 2, 3).reshape(B, cfg.n_heads,
+                                                  cfg.d_head)
+
+    # ------------------------------------------------------------------
+    # decode blocks
+    # ------------------------------------------------------------------
+    def _decode_attn_layer(self, pl_, x, pools, g_idx, w_idx, lengths,
+                           plan, is_glob):
+        cfg = self.cfg
+        h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
+        use_window = (cfg.window is not None) and not is_glob
+        # K/V for the new token (the paper's ❸→❹ write into G2/own pages)
+        _, k_new, v_new = attn_mod.project_qkv(pl_["attn"], cfg, h,
+                                               lengths[:, None])
+        k1, v1 = k_new[:, 0], v_new[:, 0]
+        T = self.eng.page_tokens
+        slot = lengths % T
+        if use_window:
+            kname, vname, idx = "k_pages_w", "v_pages_w", w_idx
+            NP = pools[kname].shape[3]
+            phys = (lengths // T) % NP
+            base, window = self._page_pos_w_new, cfg.window
+        else:
+            kname, vname, idx = "k_pages_g", "v_pages_g", g_idx
+            logical = lengths // T
+            phys = jnp.take_along_axis(self._table, logical[:, None],
+                                       axis=1)[:, 0]
+            base, window = self._base_g, None
+        page_axes = (plan.page_axes_w if use_window else plan.page_axes_g)
+        sharded = (self.mesh is not None and self.mesh.size > 1
+                   and bool(page_axes))
+        if sharded and self.eng.uniform_lengths:
+            # append INSIDE the owning shard (paper: direct G2-die write);
+            # a pjit-level update on the sharded page dim lowers to a
+            # full-pool ownership select per layer (§Perf iteration 2)
+            pools[kname], pools[vname] = seqpar.sharded_append_uniform(
+                pools[kname], pools[vname], idx, k1, v1, phys, slot,
+                self.mesh, batch_axes=plan.batch_axes, page_axes=page_axes)
+        else:
+            pools[kname] = self._append_token(pools[kname], idx, phys, slot,
+                                              k1)
+            pools[vname] = self._append_token(pools[vname], idx, phys, slot,
+                                              v1)
+        kp = self._layer_slice(pools[kname], idx)
+        vp = self._layer_slice(pools[vname], idx)
+
+        attend = (self._attend_discrete
+                  if self.eng.variant == "discrete" or self.eng.hg_pipeline
+                  else self._attend_compact)
+        o = attend(pl_, h, kp, vp, base, lengths, plan,
+                   "w" if use_window else "g", window)
+        aout = attn_mod.project_out(pl_["attn"], cfg, o[:, None])
+        return h, aout, pools
+
+    def _decode_block(self, pl_, x, pools, states, cross, l_idx, g_idx,
+                      w_idx, lengths, plan, is_glob):
+        cfg = self.cfg
+
+        if cfg.family == "ssm":
+            return self._rwkv_decode_block(pl_, x, states, l_idx), pools
+
+        h, aout, pools = self._decode_attn_layer(
+            pl_, x, pools, g_idx, w_idx, lengths, plan, is_glob)
+
+        if cfg.family == "hybrid":
+            st = {k: self._layer_slice(states[k], l_idx)
+                  for k in ("ssm_state", "conv_tail")}
+            sout, s_new, tail_new = ssm_mod.ssm_decode_step(
+                pl_["ssm"], cfg, h, st["ssm_state"], st["conv_tail"])
+            aout = (aout + sout) * 0.5
+            states["ssm_state"] = states["ssm_state"].at[l_idx].set(s_new)
+            states["conv_tail"] = states["conv_tail"].at[l_idx].set(
+                tail_new.astype(states["conv_tail"].dtype))
+        x = x + aout
+
+        if cross is not None:
+            h = rms_norm(x, pl_["ln_cross"], cfg.norm_eps)
+            ck = self._layer_slice(cross["cross_k"], l_idx)
+            cv = self._layer_slice(cross["cross_v"], l_idx)
+            x = x + self._cross_attention(pl_["cross"], h, ck, cv, plan)
+
+        h = rms_norm(x, pl_["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            ff = moe(pl_["moe"], h, top_k=cfg.top_k,
+                     capacity_factor=self.rt.moe_capacity)
+        else:
+            ff = mlp(pl_["mlp"], h, cfg.gated_mlp)
+        return ((x + ff, states), pools)
+
+    def _rwkv_decode_block(self, pl_, x, states, l_idx):
+        cfg = self.cfg
+        h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
+        st = self._layer_slice(states["rwkv_state"], l_idx)
+        sh = self._layer_slice(states["rwkv_shift"], l_idx)
+        tout, s_new, shift_new = rwkv_mod.rwkv_timemix(
+            pl_["tmix"], cfg, h, st, sh.astype(h.dtype), chunked=False)
+        x = x + tout
+        h = rms_norm(x, pl_["ln2"], cfg.norm_eps)
+        cm = pl_["cmix"]
+        h_prev = self._layer_slice(states["rwkv_shift2"],
+                                   l_idx).astype(h.dtype)[:, None]
+        xk = h + (h_prev - h) * cm["mu_k"].astype(h.dtype)
+        xr = h + (h_prev - h) * cm["mu_r"].astype(h.dtype)
+        k = jnp.square(jax.nn.relu(dense(cm, "ck", xk)))
+        v = dense(cm, "cv", k)
+        r = jax.nn.sigmoid(dense(cm, "cr", xr))
+        x = x + r * v
+        states["rwkv_state"] = states["rwkv_state"].at[l_idx].set(s_new)
+        states["rwkv_shift"] = states["rwkv_shift"].at[l_idx].set(
+            shift_new.astype(states["rwkv_shift"].dtype))
+        states["rwkv_shift2"] = states["rwkv_shift2"].at[l_idx].set(
+            h[:, -1].astype(states["rwkv_shift2"].dtype))
+        return x, states
+
+    def _cross_attention(self, pcross, h, ck, cv, plan: ShardPlan):
+        """Whisper decode cross-attention via the paged partial-attention op
+        (encoder KV viewed as pages: Senc = NP·T)."""
+        cfg = self.cfg
+        B = h.shape[0]
+        Senc = ck.shape[1]
+        T = self.eng.page_tokens
+        NP = paged_kv.ceil_div(Senc, T)
+        q = attn_mod._proj(pcross, "wq", h).reshape(
+            B, cfg.n_heads, cfg.d_head)
+        kp = ck.reshape(B, NP, T, cfg.n_kv_heads, cfg.d_head
+                        ).transpose(0, 3, 1, 2, 4)
+        vp = cv.reshape(B, NP, T, cfg.n_kv_heads, cfg.d_head
+                        ).transpose(0, 3, 1, 2, 4)
+        base = jnp.broadcast_to(
+            (jnp.arange(NP, dtype=jnp.int32) * T)[None], (B, NP))
+        length = jnp.full((B,), Senc, jnp.int32)
+        o = self._paged_attn(q, kp, vp, base, length, plan, "w", None)
+        return attn_mod.project_out(pcross, cfg, o[:, None])
+
+    # ------------------------------------------------------------------
+    # decode step
+    # ------------------------------------------------------------------
+    def _collect(self, cache: DecodeCache, names) -> Dict[str, jax.Array]:
+        return {n: getattr(cache, n) for n in names
+                if getattr(cache, n) is not None}
+
+    def decode_step(self, params, cache: DecodeCache, tokens: jax.Array):
+        """tokens: [B, 1] -> (logits [B, V], updated cache)."""
+        cfg, rt = self.cfg, self.rt
+        B = tokens.shape[0]
+        lengths = cache.lengths
+        NPg = (cache.k_pages_g.shape[3]
+               if cache.k_pages_g is not None else 1)
+        plan = plan_sharding(self.mesh, B, NPg)
+
+        # shared per-step page bookkeeping (identical for every layer)
+        self._table = cache.page_table_g
+        if cache.page_table_g is not None:
+            T = self.eng.page_tokens
+            NP = cache.page_table_g.shape[1]
+            self._base_g = jnp.zeros((B, NP), jnp.int32).at[
+                jnp.arange(B)[:, None], cache.page_table_g].set(
+                jnp.arange(NP, dtype=jnp.int32)[None] * T)
+        else:
+            self._base_g = None
+        if cache.page_pos_w is not None:
+            T = self.eng.page_tokens
+            NPw = cache.page_pos_w.shape[1]
+            phys = (lengths // T) % NPw
+            slot = lengths % T
+            newp = cache.page_pos_w.at[jnp.arange(B), phys].set(
+                lengths - slot)
+            self._page_pos_w_new = jnp.where(
+                (slot == 0)[:, None], newp, cache.page_pos_w)
+        else:
+            self._page_pos_w_new = None
+
+        x = embed_lookup(params["embedding"], tokens, rt.activ_dtype)
+
+        n_groups = cfg.n_layers // self.period
+        grouped_params = jax.tree.map(
+            lambda a: a.reshape((n_groups, self.period) + a.shape[1:]),
+            params["layers"])
+        pools = self._collect(cache, POOL_G + POOL_W)
+        states = self._collect(cache, STATE_LEAVES)
+        cross = self._collect(cache, ("cross_k", "cross_v")) or None
+
+        idx = {
+            "p": grouped_params,
+            "l0": jnp.arange(n_groups, dtype=jnp.int32) * self.period,
+            "g0": jnp.arange(n_groups, dtype=jnp.int32) * self.g_per_group,
+            "w0": jnp.arange(n_groups, dtype=jnp.int32) * self.w_per_group,
+        }
+
+        def group_body(carry, xs):
+            xc, pools, states = carry
+            for j, is_glob in enumerate(self.pattern):
+                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                out, pools = self._decode_block(
+                    pl_, xc, pools, states, cross,
+                    xs["l0"] + j, xs["g0"] + self._g_off[j],
+                    xs["w0"] + self._w_off[j], lengths, plan, is_glob)
+                xc, states = out
+            return (xc, pools, states), None
+
+        (x, pools, states), _ = jax.lax.scan(
+            group_body, (x, pools, states), idx)
+
+        updates: Dict[str, Any] = dict(pools)
+        updates.update(states)
+        if self._page_pos_w_new is not None:
+            updates["page_pos_w"] = self._page_pos_w_new
+        updates["lengths"] = lengths + 1
+        new_cache = dataclasses.replace(cache, **updates)
+        logits = lm_head_logits(params, cfg, x)[:, 0]
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array], max_context: int):
+        """Full-prompt prefill.  Returns (last-token logits, primed cache).
+
+        Attention runs compute-bound (ring/flash — the paper's NPU prefill);
+        the K/V stream is page-packed into the pools (Fig 7a)."""
+        cfg, rt = self.cfg, self.rt
+        x, positions = embed_inputs(params, cfg, batch, rt)
+        B, S = x.shape[:2]
+        enc_out = None
+        enc_len = 0
+        if cfg.is_encoder_decoder:
+            from repro.models.transformer import run_layers
+            enc = batch["frames"].astype(rt.activ_dtype)
+            enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None],
+                                       enc.shape[:2])
+            enc_out, _ = run_layers(params, cfg, enc, rt, enc_pos,
+                                    stack="encoder")
+            enc_out = rms_norm(enc_out, params["encoder_norm"], cfg.norm_eps)
+            enc_len = enc_out.shape[1]
+
+        cache = self.init_cache(B, max(max_context, S + 1), enc_len=enc_len)
+        NPg = (cache.k_pages_g.shape[3]
+               if cache.k_pages_g is not None else 1)
+        self._prefill_plan = plan_sharding(self.mesh, B, NPg)
+        n_groups = cfg.n_layers // self.period
+        grouped_params = jax.tree.map(
+            lambda a: a.reshape((n_groups, self.period) + a.shape[1:]),
+            params["layers"])
+        pools = self._collect(cache, POOL_G + POOL_W)
+        states = self._collect(cache, STATE_LEAVES)
+        cross = self._collect(cache, ("cross_k", "cross_v"))
+
+        idx = {
+            "p": grouped_params,
+            "l0": jnp.arange(n_groups, dtype=jnp.int32) * self.period,
+            "g0": jnp.arange(n_groups, dtype=jnp.int32) * self.g_per_group,
+            "w0": jnp.arange(n_groups, dtype=jnp.int32) * self.w_per_group,
+        }
+
+        def group_body(carry, xs):
+            xc, pools, states, cross_c = carry
+            for j, is_glob in enumerate(self.pattern):
+                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                xc, pools, states, cross_c = self._prefill_block(
+                    pl_, xc, positions, enc_out, is_glob, pools, states,
+                    cross_c, xs["l0"] + j, xs["g0"] + self._g_off[j],
+                    xs["w0"] + self._w_off[j])
+            return (xc, pools, states, cross_c), None
+
+        (x, pools, states, cross), _ = jax.lax.scan(
+            group_body, (x, pools, states, cross), idx)
+
+        updates: Dict[str, Any] = dict(pools)
+        updates.update(states)
+        updates.update(cross)
+        updates["lengths"] = jnp.full((B,), S, jnp.int32)
+        if cache.page_pos_w is not None:
+            updates["page_pos_w"] = self._prefill_window_pos(
+                S, cache.page_pos_w.shape[1], B)
+        cache = dataclasses.replace(cache, **updates)
+        logits = lm_head_logits(params, cfg, x[:, -1:])[:, 0]
+        return logits, cache
+
+    def _prefill_window_pos(self, S: int, NPw: int, B: int):
+        vals = paged_kv.window_page_positions(S, NPw, self.eng.page_tokens)
+        return jnp.broadcast_to(jnp.asarray(vals)[None], (B, NPw))
+
+    def _prefill_block(self, pl_, x, positions, enc_out, is_glob, pools,
+                       states, cross, l_idx, g_idx, w_idx):
+        cfg, rt = self.cfg, self.rt
+        B, S = x.shape[:2]
+
+        if cfg.family == "ssm":
+            x, states = self._rwkv_prefill_block(pl_, x, states, l_idx)
+            return x, pools, states, cross
+
+        h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(pl_["attn"], cfg, h, positions)
+        window = cfg.window if (cfg.window and not is_glob) else None
+        o = attn_mod.sharded_flash_attention(
+            q, k, v, causal=True, window=window, impl=rt.attn_impl)
+        aout = attn_mod.project_out(pl_["attn"], cfg, o)
+
+        use_window = (cfg.window is not None) and not is_glob
+        plan = self._prefill_plan
+        sharded = self.mesh is not None and self.mesh.size > 1
+        if use_window:
+            if sharded and plan.page_axes_w:
+                fill = functools.partial(
+                    seqpar.sharded_window_fill, mesh=self.mesh,
+                    batch_axes=plan.batch_axes,
+                    page_axes=plan.page_axes_w)
+                pools["k_pages_w"] = fill(pools["k_pages_w"], k, w_idx)
+                pools["v_pages_w"] = fill(pools["v_pages_w"], v, w_idx)
+            else:
+                pools["k_pages_w"] = paged_kv.fill_window_at(
+                    pools["k_pages_w"], k, w_idx)
+                pools["v_pages_w"] = paged_kv.fill_window_at(
+                    pools["v_pages_w"], v, w_idx)
+        else:
+            if sharded and plan.page_axes_g:
+                fill = functools.partial(
+                    seqpar.sharded_prefill_fill, mesh=self.mesh,
+                    batch_axes=plan.batch_axes,
+                    page_axes=plan.page_axes_g)
+                pools["k_pages_g"] = fill(pools["k_pages_g"], k, g_idx)
+                pools["v_pages_g"] = fill(pools["v_pages_g"], v, g_idx)
+            else:
+                pools["k_pages_g"] = paged_kv.fill_prefill_at(
+                    pools["k_pages_g"], k, g_idx)
+                pools["v_pages_g"] = paged_kv.fill_prefill_at(
+                    pools["v_pages_g"], v, g_idx)
+
+        if cfg.family == "hybrid":
+            state0 = jnp.zeros(states["ssm_state"].shape[1:], jnp.float32)
+            tail0 = jnp.zeros(states["conv_tail"].shape[1:],
+                              states["conv_tail"].dtype)
+            sout, s_new, tail_new = ssm_mod.ssm_mixer(
+                pl_["ssm"], cfg, h, state0, tail0)
+            aout = (aout + sout) * 0.5
+            states["ssm_state"] = states["ssm_state"].at[l_idx].set(s_new)
+            states["conv_tail"] = states["conv_tail"].at[l_idx].set(
+                tail_new.astype(states["conv_tail"].dtype))
+        x = x + aout
+
+        if cfg.is_encoder_decoder and enc_out is not None:
+            h = rms_norm(x, pl_["ln_cross"], cfg.norm_eps)
+            x = x + attn_mod.attention_train(pl_["cross"], cfg, h,
+                                             kv_x=enc_out, impl=rt.attn_impl)
+            kv_dt = jnp.dtype(self.eng.kv_dtype)
+            ck = attn_mod._proj(pl_["cross"], "wk", enc_out).astype(kv_dt)
+            cv = attn_mod._proj(pl_["cross"], "wv", enc_out).astype(kv_dt)
+            cross["cross_k"] = cross["cross_k"].at[l_idx].set(ck)
+            cross["cross_v"] = cross["cross_v"].at[l_idx].set(cv)
+
+        h = rms_norm(x, pl_["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            ff = moe(pl_["moe"], h, top_k=cfg.top_k,
+                     capacity_factor=rt.moe_capacity)
+        else:
+            ff = mlp(pl_["mlp"], h, cfg.gated_mlp)
+        return x + ff, pools, states, cross
+
+    def _rwkv_prefill_block(self, pl_, x, states, l_idx):
+        cfg = self.cfg
+        B = x.shape[0]
+        h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
+        state0 = jnp.zeros(states["rwkv_state"].shape[1:], jnp.float32)
+        shift0 = jnp.zeros((B, cfg.d_model), h.dtype)
+        tout, s_new, shift_new = rwkv_mod.rwkv_timemix(
+            pl_["tmix"], cfg, h, state0, shift0)
+        x = x + tout
+        h = rms_norm(x, pl_["ln2"], cfg.norm_eps)
+        cm = pl_["cmix"]
+        h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]],
+                                 axis=1)
+        xk = h + (h_prev - h) * cm["mu_k"].astype(h.dtype)
+        xr = h + (h_prev - h) * cm["mu_r"].astype(h.dtype)
+        kk = jnp.square(jax.nn.relu(dense(cm, "ck", xk)))
+        vv = dense(cm, "cv", kk)
+        rr = jax.nn.sigmoid(dense(cm, "cr", xr))
+        x = x + rr * vv
+        states["rwkv_state"] = states["rwkv_state"].at[l_idx].set(s_new)
+        states["rwkv_shift"] = states["rwkv_shift"].at[l_idx].set(
+            shift_new.astype(states["rwkv_shift"].dtype))
+        states["rwkv_shift2"] = states["rwkv_shift2"].at[l_idx].set(
+            h[:, -1].astype(states["rwkv_shift2"].dtype))
+        return x, states

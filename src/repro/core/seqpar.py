@@ -1,0 +1,359 @@
+"""Sequence-parallel attention: the paper's G2 dataflow on a TPU mesh.
+
+KVNAND §IV-B: G2 dies each hold a slice of the KV cache, compute partial
+K·q products, the NPU aggregates them for the softmax, and the dies apply
+Attend to their local V slice.  That is precisely *flash-decoding* with a
+log-sum-exp combine:
+
+  decode : KV pages sharded over `model` (± `data`/`pod` for batch-1 long
+           context); each device computes partial (ō, m, ℓ) over local pages;
+           `combine_partials` (pmax/psum) plays the NPU-aggregation role.
+  train / prefill : ring attention — Q/K/V sequence-sharded, KV blocks
+           rotate via ppermute with online-softmax accumulation (SP).
+
+Neither path ever constrains on head-count divisibility (20/25-head archs
+shard fine on a 16-wide axis) and the KV bytes never cross the interconnect
+— only q vectors and [B, H] statistics do, the paper's core bandwidth
+insight.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.kernels.flash_attention.ref import NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# Partial-attention merge (the "NPU softmax aggregation")
+# ---------------------------------------------------------------------------
+
+def merge_two(o1, m1, l1, o2, m2, l2):
+    """Merge two locally-normalized partial attentions (log-sum-exp)."""
+    m = jnp.maximum(m1, m2)
+    w1 = l1 * jnp.exp(m1 - m)
+    w2 = l2 * jnp.exp(m2 - m)
+    denom = jnp.maximum(w1 + w2, 1e-30)
+    o = (o1 * w1[..., None] + o2 * w2[..., None]) / denom[..., None]
+    return o, m, w1 + w2
+
+
+def combine_partials(o, m, l, axis_names: Sequence[str]):
+    """Cross-device merge over mesh axes (inside shard_map).
+
+    o: [..., dh] locally-normalized partial outputs; m/l: [...] stats.
+    """
+    ax = tuple(axis_names)
+    M = jax.lax.pmax(m, ax)
+    w = l * jnp.exp(m - M)
+    denom = jnp.maximum(jax.lax.psum(w, ax), 1e-30)
+    o = jax.lax.psum(o * w[..., None], ax) / denom[..., None]
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Ring attention (train / prefill sequence parallelism)
+# ---------------------------------------------------------------------------
+
+def _attn_block_partial(q, k, v, q_pos, k_pos0, *, causal, window, is_global,
+                        scale):
+    """One (q-chunk × kv-chunk) partial: returns (o_normed, m, l).
+
+    q: [B, Sq, H, dh]; k/v: [B, Sk, K, dh]; q_pos: [Sq] absolute positions;
+    k_pos0: scalar absolute position of k[0].
+    """
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Sq, K, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf)               # [B,K,G,Sq,Sk]
+    k_pos = k_pos0 + jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        in_w = k_pos[None, :] > q_pos[:, None] - window
+        if is_global is not None:
+            in_w = in_w | is_global
+        mask &= in_w
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # [B,K,G,Sq]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    o = o / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return (o.reshape(B, Sq, H, dh),
+            m.transpose(0, 3, 1, 2).reshape(B, Sq, H),
+            l.transpose(0, 3, 1, 2).reshape(B, Sq, H))
+
+
+def ring_attention_local(q, k, v, *, axis_name: str, causal: bool,
+                         window: Optional[int], is_global, scale: float):
+    """Per-device body (inside shard_map): rotate KV chunks around the ring.
+
+    q/k/v: LOCAL chunks [B, Sl, H/K, dh]; device i owns positions
+    [i·Sl, (i+1)·Sl).  n_dev-1 ppermutes stream every KV chunk past every
+    q chunk; online softmax merges partials.
+    """
+    n_dev = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    B, Sl, H, dh = q.shape
+    q_pos = idx * Sl + jnp.arange(Sl)
+
+    def step(carry, r):
+        kc, vc, o, m, l = carry
+        src = (idx - r) % n_dev                                # owner of kc
+        o2, m2, l2 = _attn_block_partial(
+            q, kc, vc, q_pos, src * Sl, causal=causal, window=window,
+            is_global=is_global, scale=scale)
+        o, m, l = merge_two(o, m, l, o2, m2, l2)
+        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+        kc = jax.lax.ppermute(kc, axis_name, perm)
+        vc = jax.lax.ppermute(vc, axis_name, perm)
+        return (kc, vc, o, m, l), None
+
+    o0 = jnp.zeros((B, Sl, H, dh), jnp.float32)
+    m0 = jnp.full((B, Sl, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sl, H), jnp.float32)
+    (_, _, o, m, l), _ = jax.lax.scan(
+        step, (k, v, o0, m0, l0), jnp.arange(n_dev))
+    return o.astype(q.dtype)
+
+
+def ring_attention(q, k, v, mesh: Mesh, *, causal: bool = True,
+                   window: Optional[int] = None, is_global=None,
+                   batch_axes=("data",), seq_axis: str = "model"):
+    """shard_map wrapper: q/k/v [B, S, H/K, dh] seq-sharded over `seq_axis`."""
+    scale = q.shape[-1] ** -0.5
+    bspec = P(_axes_spec(batch_axes), seq_axis, None, None)
+    fn = functools.partial(ring_attention_local, axis_name=seq_axis,
+                           causal=causal, window=window, is_global=is_global,
+                           scale=scale)
+    if is_global is not None:
+        # traced flag rides along as an argument, replicated
+        fn2 = lambda qq, kk, vv, gg: functools.partial(  # noqa: E731
+            ring_attention_local, axis_name=seq_axis, causal=causal,
+            window=window, scale=scale)(qq, kk, vv, is_global=gg)
+        return shard_map(fn2, mesh=mesh,
+                         in_specs=(bspec, bspec, bspec, P()),
+                         out_specs=bspec, check_vma=False)(q, k, v, is_global)
+    return shard_map(fn, mesh=mesh, in_specs=(bspec, bspec, bspec),
+                     out_specs=bspec, check_vma=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel paged decode attention (the G2 dataflow proper)
+# ---------------------------------------------------------------------------
+
+def _shard_page_offset(page_axes: Sequence[str], np_local: int):
+    """Linearized first-local-page index of this shard."""
+    idx = 0
+    for a in page_axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx * np_local
+
+
+def local_append_uniform(pool_local, phys, slot, val, page_axes):
+    """Append one token's K or V inside the owning shard (no cross-shard
+    select): read-modify-write of a single [B, K, 1, 1, dh] slice.  phys and
+    slot are uniform across the batch (lockstep decode).
+
+    pool_local: [B, K, NP_local, T, dh]; val: [B, K, dh].
+    """
+    B, K, NPl, T, dh = pool_local.shape
+    p_loc = phys[0] - _shard_page_offset(page_axes, NPl)
+    owned = (p_loc >= 0) & (p_loc < NPl)
+    p_c = jnp.clip(p_loc, 0, NPl - 1)
+    zero = jnp.zeros((), jnp.int32)
+    cur = jax.lax.dynamic_slice(pool_local, (zero, zero, p_c, slot[0], zero),
+                                (B, K, 1, 1, dh))
+    upd = jnp.where(owned, val[:, :, None, None, :].astype(pool_local.dtype),
+                    cur)
+    return jax.lax.dynamic_update_slice(pool_local, upd,
+                                        (zero, zero, p_c, slot[0], zero))
+
+
+def sharded_append_uniform(pool_k, pool_v, layer, k_new, v_new, phys, slot,
+                           mesh: Mesh, *,
+                           batch_axes: Sequence[str] = ("data",),
+                           page_axes: Sequence[str] = ("model",)):
+    """In-place append of one token's K/V into FULL stacked pools
+    [L, B, K, NP, T, dh] at a traced layer index, inside the owning shard
+    (the paper's direct G2-die write).  Uniform lockstep positions."""
+    bspec = _axes_spec(batch_axes)
+    pspec = P(None, bspec, None, _axes_spec(page_axes), None, None)
+    nspec = P(bspec, None, None)
+    lspec = P(bspec)
+
+    def local(kp, vp, kn, vn, ph, sl, layer):
+        L, B, K, NPl, T, dh = kp.shape
+        p_loc = ph[0] - _shard_page_offset(page_axes, NPl)
+        owned = (p_loc >= 0) & (p_loc < NPl)
+        p_c = jnp.clip(p_loc, 0, NPl - 1)
+        zero = jnp.zeros((), jnp.int32)
+        idx = (layer, zero, zero, p_c, sl[0], zero)
+
+        def put(pool, val):
+            cur = jax.lax.dynamic_slice(pool, idx, (1, B, K, 1, 1, dh))
+            upd = jnp.where(owned,
+                            val[None, :, :, None, None, :].astype(pool.dtype),
+                            cur)
+            return jax.lax.dynamic_update_slice(pool, upd, idx)
+
+        return put(kp, kn), put(vp, vn)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pspec, pspec, nspec, nspec, lspec, lspec,
+                               P()),
+                     out_specs=(pspec, pspec), check_vma=False)(
+        pool_k, pool_v, k_new, v_new, phys, slot,
+        jnp.asarray(layer, jnp.int32))
+
+
+def sharded_prefill_fill(pool, kv_seq, layer, mesh: Mesh, *,
+                         batch_axes: Sequence[str] = ("data",),
+                         page_axes: Sequence[str] = ("model",)):
+    """Write prefill K/V [B, S, K, dh] into ONE layer of the stacked global
+    pool [L, B, K, NP, T, dh], each shard packing ONLY its own page range.
+
+    kv is replicated over the page axes already (prefill activations are
+    batch-sharded), so the per-shard slice is local — a pjit-level fill
+    all-gathers the ENTIRE pool per layer (measured 148 GiB × layers).
+    """
+    L, Bt, K, NP, T, dh = pool.shape
+    B, S, _, _ = kv_seq.shape
+    pad = NP * T - S
+    kv = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else \
+        kv_seq
+    bspec = _axes_spec(batch_axes)
+    pspec = P(None, bspec, None, _axes_spec(page_axes), None, None)
+    kvspec = P(bspec, None, None, None)
+
+    def local(pool_l, kvv, lyr):
+        _, Bl, _, NPl, _, _ = pool_l.shape
+        off = _shard_page_offset(page_axes, NPl)
+        zero = jnp.zeros((), jnp.int32)
+        chunk = jax.lax.dynamic_slice(
+            kvv, (zero, off * T, zero, zero), (Bl, NPl * T, K, dh))
+        pages = chunk.reshape(Bl, NPl, T, K, dh).transpose(0, 3, 1, 2, 4)
+        return jax.lax.dynamic_update_slice(
+            pool_l, pages[None].astype(pool_l.dtype),
+            (lyr, zero, zero, zero, zero, zero))
+
+    return shard_map(local, mesh=mesh, in_specs=(pspec, kvspec, P()),
+                     out_specs=pspec, check_vma=False)(
+        pool, kv, jnp.asarray(layer, jnp.int32))
+
+
+def sharded_window_fill(pool, kv_seq, layer, mesh: Mesh, *,
+                        batch_axes: Sequence[str] = ("data",),
+                        page_axes: Sequence[str] = ("model",)):
+    """Ring-fill the newest window pages of ONE layer, shard-locally."""
+    L, Bt, K, NP, T, dh = pool.shape
+    B, S, _, _ = kv_seq.shape
+    from repro.core import paged_kv as pk
+    n_src = pk.ceil_div(S, T)
+    pad = n_src * T - S
+    kv = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else \
+        kv_seq
+    bspec = _axes_spec(batch_axes)
+    pspec = P(None, bspec, None, _axes_spec(page_axes), None, None)
+    kvspec = P(bspec, None, None, None)
+
+    def local(pool_l, kvv, lyr):
+        _, Bl, _, NPl, _, _ = pool_l.shape
+        off = _shard_page_offset(page_axes, NPl)
+        zero = jnp.zeros((), jnp.int32)
+        x = kvv.reshape(Bl, n_src, T, K, dh).transpose(0, 3, 1, 2, 4)
+        for sp in range(max(0, n_src - NP), n_src):   # static, ≤ NP pages
+            slot = sp % NP
+            loc = slot - off
+            owned = (loc >= 0) & (loc < NPl)
+            loc_c = jnp.clip(loc, 0, NPl - 1)
+            idx = (lyr, zero, zero, loc_c, zero, zero)
+            cur = jax.lax.dynamic_slice(pool_l, idx, (1, Bl, K, 1, T, dh))
+            upd = jnp.where(owned,
+                            x[:, :, sp][None, :, :, None].astype(
+                                pool_l.dtype), cur)
+            pool_l = jax.lax.dynamic_update_slice(pool_l, upd, idx)
+        return pool_l
+
+    return shard_map(local, mesh=mesh, in_specs=(pspec, kvspec, P()),
+                     out_specs=pspec, check_vma=False)(
+        pool, kv, jnp.asarray(layer, jnp.int32))
+
+
+def paged_decode_attention_sharded(
+    q, k_pages, v_pages, page_base, length, mesh: Mesh, *,
+    window: Optional[int] = None, is_global=None,
+    batch_axes: Sequence[str] = ("data",),
+    page_axes: Sequence[str] = ("model",),
+    impl: str = "auto",
+    append: Optional[Tuple] = None,   # (k_new [B,K,dh], v_new, phys, slot)
+):
+    """q: [B, H, dh]; pages: [B, K, NP, T, dh]; page_base: [B, NP] absolute
+    position of each physical page's slot 0 (<0 = unwritten);
+    length: [B] context length INCLUDING the token being decoded.
+
+    Pages sharded over `page_axes`; batch over `batch_axes`; combine via
+    psum over `page_axes` (the paper's NPU aggregation step).  When `append`
+    is given, the new token's K/V land in the owning shard *inside* the
+    shard_map (the paper's direct G2 write) — a pjit-level update on the
+    sharded page dim would lower to a full-pool ownership select per layer
+    (measured: the dominant decode HLO traffic).
+
+    Returns o, or (o, new_k_pages, new_v_pages) when appending.
+    """
+    from repro.kernels.paged_attention.ops import paged_attention_partial
+
+    n_page_shards = 1
+    for a in page_axes:
+        n_page_shards *= mesh.shape[a]
+
+    bspec = _axes_spec(batch_axes)
+    qspec = P(bspec, None, None)
+    pspec = P(bspec, None, _axes_spec(page_axes), None, None)
+    basespec = P(bspec, _axes_spec(page_axes))
+    lenspec = P(bspec)
+    nspec = P(bspec, None, None)
+
+    def run(qq, kp, vp, base, ln):
+        o, m, l = paged_attention_partial(qq, kp, vp, base, ln,
+                                          window=window, is_global=is_global,
+                                          impl=impl)
+        if n_page_shards > 1:
+            o = combine_partials(o, m, l, tuple(page_axes))
+        return o.astype(qq.dtype)
+
+    if append is None:
+        return shard_map(run, mesh=mesh,
+                         in_specs=(qspec, pspec, pspec, basespec, lenspec),
+                         out_specs=qspec, check_vma=False)(
+            q, k_pages, v_pages, page_base, length)
+
+    def run_append(qq, kp, vp, base, ln, kn, vn, phys, slot):
+        kp = local_append_uniform(kp, phys, slot, kn, page_axes)
+        vp = local_append_uniform(vp, phys, slot, vn, page_axes)
+        return run(qq, kp, vp, base, ln), kp, vp
+
+    k_new, v_new, phys, slot = append
+    return shard_map(run_append, mesh=mesh,
+                     in_specs=(qspec, pspec, pspec, basespec, lenspec,
+                               nspec, nspec, lenspec, lenspec),
+                     out_specs=(qspec, pspec, pspec), check_vma=False)(
+        q, k_pages, v_pages, page_base, length, k_new, v_new, phys, slot)
+
+
+def _axes_spec(axes: Sequence[str]):
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_attention.ref import (  # noqa: F401
+    dense_attention_ref,
+    flash_attention_ref,
+)

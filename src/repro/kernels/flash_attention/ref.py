@@ -1,0 +1,122 @@
+"""Pure-jnp oracle for blocked causal attention (online softmax).
+
+This is both the correctness reference for the Pallas kernel and the
+CPU/dry-run lowering path (`impl="ref"`): it computes identical math with a
+`lax.scan` over KV chunks, so HLO FLOPs/bytes match the real workload without
+materializing the [Sq, Sk] score matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(x: jax.Array, groups: int) -> jax.Array:
+    """[B, S, K, dh] -> [B, S, K*G, dh] by repeating each KV head G times."""
+    if groups == 1:
+        return x
+    B, S, K, dh = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, K, groups, dh)).reshape(
+        B, S, K * groups, dh)
+
+
+def flash_attention_ref(
+    q: jax.Array,                  # [B, Sq, H, dh]
+    k: jax.Array,                  # [B, Sk, K, dh]
+    v: jax.Array,                  # [B, Sk, K, dh]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window (tokens), None = full
+    q_offset=0,                    # absolute position of q[0] (int or array)
+    chunk_k: int = 512,
+    is_global=None,                # optional scalar bool overriding window
+) -> jax.Array:
+    """Blocked attention with online softmax; supports GQA + sliding window.
+
+    `is_global` (traced bool) disables the window dynamically — used by the
+    gemma3 local:global scan-over-layers where the pattern is a scanned input.
+    """
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    groups = H // K
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+
+    orig_dtype = q.dtype
+    scale = dh ** -0.5
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # [B, H, Sq, dh]
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)            # [B, H, Sk, dh]
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+
+    q_pos = q_offset + jnp.arange(Sq)                           # [Sq]
+
+    chunk_k = min(chunk_k, Sk)
+    n_chunks = -(-Sk // chunk_k)
+    pad = n_chunks * chunk_k - Sk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = kf.reshape(B, H, n_chunks, chunk_k, dh)
+    vc = vf.reshape(B, H, n_chunks, chunk_k, dh)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, c = inputs                                      # [B,H,ck,dh]
+        k_pos = c * chunk_k + jnp.arange(chunk_k)               # [ck]
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb)               # [B,H,Sq,ck]
+        mask = k_pos[None, :] < Sk                              # padding
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            in_window = k_pos[None, :] > q_pos[:, None] - window
+            if is_global is not None:
+                in_window = in_window | is_global
+            mask &= in_window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))             # [B,H,Sq]
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+         jnp.arange(n_chunks)))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(orig_dtype)        # [B, Sq, H, dh]
+
+
+def dense_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0,
+                        is_global=None):
+    """Naive dense softmax attention — oracle-of-the-oracle for tests."""
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    k = _expand_kv(k, H // K)
+    v = _expand_kv(v, H // K)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        in_w = k_pos[None, :] > q_pos[:, None] - window
+        if is_global is not None:
+            in_w = in_w | is_global
+        mask &= in_w
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.paged_attention.ops import paged_attention_partial  # noqa
+from repro.kernels.paged_attention.ref import (  # noqa: F401
+    paged_attention_partial_ref,
+    paged_to_dense,
+)

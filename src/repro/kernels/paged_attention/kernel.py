@@ -1,0 +1,136 @@
+"""Pallas TPU paged decode-attention kernel.
+
+Grid: (B, K, page_blocks) — page_blocks innermost/sequential so VMEM scratch
+carries the online softmax across the sequence-striped page pool.  Each step
+streams `pages_per_block` whole pages [ppb·T, dh] HBM→VMEM (the layout
+guarantees pages are head-major and physically sequential — paper §IV-D:
+"sequential page order ... preserved for high read speed") and computes the
+G-query-head group against them (the paper's head-group granule).
+
+page_base [B, NP] and length [B] arrive via scalar prefetch (SMEM): token
+validity is data-derived, so there is no gather and no page-table walk in
+the inner loop.
+
+Outputs are the per-shard partials (ō, m, ℓ) consumed by the cross-device
+combine (core/seqpar.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,                     # VMEM blocks
+            o_ref, m_ref, l_ref,                     # outputs
+            m_scr, l_scr, acc_scr,                   # VMEM scratch
+            *, T: int, ppb: int, n_blocks: int, window: Optional[int],
+            scale: float):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    G, dh = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [G, dh]
+    k = k_ref[0, 0].reshape(ppb * T, dh).astype(jnp.float32)
+    v = v_ref[0, 0].reshape(ppb * T, dh).astype(jnp.float32)
+
+    # data-derived validity from prefetched page bases
+    length = len_ref[b]
+    page_ids = ib * ppb + jax.lax.broadcasted_iota(jnp.int32, (ppb, T), 0)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (ppb, T), 1)
+    bases = base_ref[b, pl.dslice(ib * ppb, ppb)]            # [ppb]
+    pos = bases[:, None] + slots                             # [ppb, T]
+    valid = (bases[:, None] >= 0) & (pos < length)
+    if window is not None:
+        valid &= pos > (length - 1 - window)
+    valid = valid.reshape(ppb * T)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, ppb*T]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                      # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ib == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def paged_attention_pallas(
+    q: jax.Array,          # [B, K, G, dh]
+    k_pages: jax.Array,    # [B, K, NP, T, dh]
+    v_pages: jax.Array,
+    page_base: jax.Array,  # [B, NP] int32
+    length: jax.Array,     # [B] int32
+    *,
+    window: Optional[int] = None,
+    pages_per_block: int = 8,
+    interpret: bool = False,
+):
+    B, K, NP, T, dh = k_pages.shape
+    G = q.shape[2]
+    ppb = min(pages_per_block, NP)
+    assert NP % ppb == 0, (NP, ppb)
+    n_blocks = NP // ppb
+    scale = dh ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, ppb, T, dh),
+                         lambda b, k, ib, *_: (b, k, ib, 0, 0)),
+            pl.BlockSpec((1, 1, ppb, T, dh),
+                         lambda b, k, ib, *_: (b, k, ib, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, T=T, ppb=ppb, n_blocks=n_blocks,
+                               window=window, scale=scale)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, G, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(page_base, length, q, k_pages, v_pages)
+    return o, m[..., 0], l[..., 0]

@@ -1,0 +1,52 @@
+"""Public wrapper for partial paged decode attention with impl dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_partial_ref
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def paged_attention_partial(
+    q: jax.Array,          # [B, H, dh]
+    k_pages: jax.Array,    # [B, K, NP, T, dh]
+    v_pages: jax.Array,
+    page_base: jax.Array,  # [B, NP]
+    length: jax.Array,     # [B]
+    *,
+    window: Optional[int] = None,
+    is_global=None,
+    impl: str = "auto",
+    pages_per_block: int = 8,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (ō [B,H,dh] locally normalized, m [B,H], ℓ [B,H])."""
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "ref" or is_global is not None:
+        # dynamic local/global flags (scanned layers) take the jnp path
+        return paged_attention_partial_ref(
+            q, k_pages, v_pages, page_base, length,
+            window=window, is_global=is_global)
+
+    B, H, dh = q.shape
+    K = k_pages.shape[1]
+    G = H // K
+    ppb = pages_per_block
+    NP = k_pages.shape[2]
+    while NP % ppb:
+        ppb //= 2
+    o, m, l = paged_attention_pallas(
+        q.reshape(B, K, G, dh), k_pages, v_pages,
+        page_base.astype(jnp.int32), length.astype(jnp.int32),
+        window=window, pages_per_block=max(ppb, 1),
+        interpret=(impl == "interpret"))
+    return (o.reshape(B, H, dh).astype(q.dtype),
+            m.reshape(B, H), l.reshape(B, H))

@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for partial paged decode attention.
+
+Computes one decode token's attention against a sequence-striped page pool
+(one shard's worth), returning locally-normalized output + (m, ℓ) softmax
+stats for the cross-shard combine (paper: per-die Logit/Attend partials that
+the NPU aggregates).
+
+Key property of the page layout (paper §IV-D): pages are (head)-major and
+physically sequential, so validity is *data-derived* (page_base + slot vs
+length/window) — reads are streaming, never gathered.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_partial_ref(
+    q: jax.Array,          # [B, H, dh]
+    k_pages: jax.Array,    # [B, K, NP, T, dh]   (local shard)
+    v_pages: jax.Array,    # [B, K, NP, T, dh]
+    page_base: jax.Array,  # [B, NP] absolute pos of slot 0 (<0 = unwritten)
+    length: jax.Array,     # [B] context length incl. current token
+    *,
+    window: Optional[int] = None,
+    is_global=None,        # traced bool: overrides window (gemma3 scan)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, K, NP, T, dh = k_pages.shape
+    H = q.shape[1]
+    G = H // K
+    scale = dh ** -0.5
+
+    # compute in the POOL dtype with f32 accumulation: casting the pool to
+    # f32 would materialize a 2× copy of the entire local KV every layer
+    # (measured: dominant HLO bytes) — exactly what a TPU kernel avoids by
+    # feeding bf16 into the MXU with an f32 accumulator.
+    dt = k_pages.dtype
+    qg = (q.astype(jnp.float32) * scale).astype(dt).reshape(B, K, G, dh)
+
+    pos = page_base[:, :, None] + jnp.arange(T)[None, None, :]   # [B, NP, T]
+    valid = (page_base >= 0)[:, :, None] & (pos < length[:, None, None])
+    if window is not None:
+        in_w = pos > (length[:, None, None] - 1 - window)
+        if is_global is not None:
+            in_w = in_w | is_global
+        valid &= in_w
+
+    s = jnp.einsum("bkgd,bkntd->bkgnt", qg, k_pages,
+                   preferred_element_type=jnp.float32)           # [B,K,G,NP,T]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=(-2, -1))                                # [B, K, G]
+    p = jnp.exp(s - m[..., None, None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=(-2, -1))                                # [B, K, G]
+    o = jnp.einsum("bkgnt,bkntd->bkgd", p.astype(dt), v_pages,
+                   preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+
+    return (o.reshape(B, H, dh), m.reshape(B, H), l.reshape(B, H))
+
+
+def paged_to_dense(k_pages, page_base, max_len: int):
+    """Test helper: reassemble [B, S, K, dh] from pages by position."""
+    B, K, NP, T, dh = k_pages.shape
+    pos = (page_base[:, :, None] + jnp.arange(T)[None, None, :]).reshape(B, -1)
+    flat = k_pages.transpose(0, 2, 3, 1, 4).reshape(B, NP * T, K, dh)
+    dense = jnp.zeros((B, max_len, K, dh), k_pages.dtype)
+    idx = jnp.clip(pos, 0, max_len - 1)
+    ok = (pos >= 0) & (pos < max_len)
+    upd = jnp.where(ok[..., None, None], flat, 0)
+    return dense.at[jnp.arange(B)[:, None], idx].add(upd)

@@ -1,0 +1,2 @@
+from repro.kernels.quant_gemv.ops import quant_gemv  # noqa: F401
+from repro.kernels.quant_gemv.ref import quant_gemv_ref, unpack_int4  # noqa

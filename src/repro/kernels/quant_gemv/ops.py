@@ -1,0 +1,44 @@
+"""Public quantized-matmul wrapper with impl dispatch."""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_gemv.kernel import quant_gemv_pallas
+from repro.kernels.quant_gemv.ref import quant_gemv_ref
+
+if TYPE_CHECKING:  # avoid circular import at runtime
+    from repro.core.quant import QuantizedWeight
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def quant_gemv(x: jax.Array, qw: "QuantizedWeight", *,
+               impl: str = "auto") -> jax.Array:
+    """x: [..., D] @ quantized [D, F] -> [..., F] in x.dtype."""
+    if impl == "auto":
+        impl = default_impl()
+    if qw.q.ndim != 2 or impl == "ref":
+        # expert-batched (MoE) or ref path: dequant-then-matmul (XLA fuses)
+        return quant_gemv_ref(x, qw.q, qw.scale, qw.scheme)
+
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    M = 1
+    for s in lead:
+        M *= s
+    x2 = x.reshape(M, D)
+    if qw.scheme == "w8a8":
+        from repro.core.quant import quantize_activations_int8
+        xq, xs = quantize_activations_int8(x2)
+        out = quant_gemv_pallas(xq, qw.q, qw.scale, "w8a8",
+                                interpret=(impl == "interpret"))
+        out = out * xs
+    else:
+        out = quant_gemv_pallas(x2.astype(jnp.bfloat16), qw.q, qw.scale,
+                                "w4a16", interpret=(impl == "interpret"))
+    return out.reshape(*lead, qw.q.shape[-1]).astype(x.dtype)

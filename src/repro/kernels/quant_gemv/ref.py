@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for quantized GEMV/GEMM (w8a8 / w4a16).
+
+2D weights only ([D, F] + per-channel scale [F]); MoE (expert-batched)
+weights take the dequantize-then-einsum path in layers.py, which XLA fuses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_int4(q: jax.Array) -> jax.Array:
+    """[..., D/2, F] uint8 -> [..., D, F] int32 in [-8, 7]."""
+    hi = ((q >> 4) & 0xF).astype(jnp.int32) - 8
+    lo = (q & 0xF).astype(jnp.int32) - 8
+    D2 = q.shape[-2]
+    out = jnp.stack([hi, lo], axis=-2)
+    return out.reshape(q.shape[:-2] + (2 * D2,) + q.shape[-1:])
+
+
+def quant_gemv_ref(x: jax.Array, q: jax.Array, scale: jax.Array,
+                   scheme: str) -> jax.Array:
+    """x: [..., D]; q: [D, F] int8 (w8) or [D/2, F] uint8 (w4); scale: [F]."""
+    if scheme == "w4a16":
+        w = unpack_int4(q).astype(jnp.bfloat16)
+        y = jnp.einsum("...d,df->...f", x.astype(jnp.bfloat16), w)
+        return (y.astype(jnp.float32) *
+                scale.astype(jnp.float32)).astype(x.dtype)
+    elif scheme == "w8a8":
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        xs = jnp.maximum(amax, 1e-8) / 127.0
+        xq = jnp.clip(jnp.round(x.astype(jnp.float32) / xs), -127,
+                      127).astype(jnp.int8)
+        acc = jnp.einsum("...d,df->...f", xq.astype(jnp.int32),
+                         q.astype(jnp.int32))
+        return (acc.astype(jnp.float32) * xs *
+                scale.astype(jnp.float32)).astype(x.dtype)
+    raise ValueError(scheme)

@@ -1,0 +1,7 @@
+"""Oracles for the wkv6 Pallas kernel.
+
+The module-of-record for the math is models/rwkv6.py (recurrent form =
+ground truth, chunked form = parallel validation); re-exported here so the
+kernel package follows the kernel/ops/ref contract.
+"""
+from repro.models.rwkv6 import wkv_chunked, wkv_recurrent  # noqa: F401

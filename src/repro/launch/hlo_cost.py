@@ -1,0 +1,419 @@
+"""HLO-text cost model with while-loop trip-count multiplication.
+
+XLA's aggregate `compiled.cost_analysis()` counts a `while` body ONCE
+(verified: an 8-step scan of 2.1 MFLOP matmuls reports 2.1 MFLOP, the
+unrolled equivalent 16.8 MFLOP).  Every model here scans over layers (and
+microbatches, ring steps, head groups), so aggregate numbers would be off
+by 1–2 orders of magnitude.  This module re-derives costs from the
+optimized per-device HLO text:
+
+  flops   — `dot` ops: 2 · |result| · K (K from lhs_contracting_dims),
+            counted inside fused computations too, × execution multiplicity
+            (product of enclosing while trip counts from
+            backend_config known_trip_count).
+  bytes   — per *scheduled* op (fusions opaque: their params/results only):
+            Σ operands + result, with slicing ops counted by the data they
+            actually move (dynamic-slice/gather = |result| read,
+            dynamic-update-slice/scatter ≈ 2·|update|); parameters/GTE/
+            tuple/bitcast/constant are register/aliasing ops → 0.
+
+            TPU-native discounts (the CPU stand-in backend emulates bf16 by
+            f32 convert-wrapping every op and double-buffers while-loop
+            carries; a TPU build does neither — verified by re-lowering
+            with f32 pools: 347 GiB → 16 GiB for the same program):
+              * pure convert/repack fusions (only convert/copy/bitcast/
+                reshape/transpose/broadcast inside, result dims == a param's
+                dims) → 0;
+              * dtype-convert aliasing is followed when detecting
+                dynamic-(update-)slice targets inside fusions, and the
+                in-place result alias match ignores dtype;
+              * same-shape top-level `copy` ops (carry double-buffering) → 0.
+  colls   — collective payload bytes by kind (all-reduce, all-gather,
+            reduce-scatter, all-to-all, collective-permute), × multiplicity.
+
+All values are per-device (the HLO is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"([a-z]+[0-9]+[a-z0-9]*|pred|token|opaque)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[\\"{:\s]+n[\\":\s]+"?(\d+)')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+ZERO_BYTE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "iota", "after-all", "add-dependency", "partition-id", "replica-id",
+    # control flow: the called computations' ops are costed directly
+    "while", "conditional", "call",
+}
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shapes) -> float:
+    total = 0.0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operand_names: List[str]
+    attrs: str
+    trip_count: int = 1            # for while ops
+    called: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, List[Tuple[str, Tuple[int, ...]]]]
+    ops: List[Op]
+
+
+def _split_operands(args: str) -> List[str]:
+    """Operand list of `op(...)` — top-level comma split."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [o.lstrip("%") for o in out if o.strip()]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                params = {}
+                for part in _split_operands(m.group(2)):
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        params[pname.strip().lstrip("%")] = \
+                            _parse_shapes(ptype)
+                cur = Computation(m.group(1), params, [])
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type(s) = prefix of rhs up to the opcode word
+        om = re.match(r"^((?:\([^)]*\)|[a-z0-9_\[\]{},\s]+?))\s+"
+                      r"([a-z][\w\-]*)\(", rhs)
+        if not om:
+            continue
+        rtype, opcode = om.group(1), om.group(2)
+        # operands: inside the first balanced paren after opcode
+        start = rhs.index(opcode + "(") + len(opcode) + 1
+        depth, i = 1, start
+        while i < len(rhs) and depth:
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = rhs[start:i - 1]
+        attrs = rhs[i:]
+        called = tuple(re.findall(
+            r"(?:calls|body|condition|to_apply|branch_computations=\{)"
+            r"=?%?([\w.\-]+)", attrs))
+        op = Op(name=name, opcode=opcode,
+                result_shapes=_parse_shapes(rtype),
+                operand_names=_split_operands(operand_str),
+                attrs=attrs, called=called)
+        if opcode == "while":
+            tm = _TRIP_RE.search(attrs)
+            op.trip_count = int(tm.group(1)) if tm else 1
+        cur.ops.append(op)
+    return comps
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    fusible_bytes: float = 0.0     # attention-intermediate traffic a fused
+    #                                (Pallas) kernel keeps in VMEM
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    transcendental: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _dot_flops(op: Op, symtab) -> float:
+    res_elems = 0.0
+    for dt, shape in op.result_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        res_elems += n
+    lhs = symtab.get(op.operand_names[0]) if op.operand_names else None
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if lhs and m:
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        shape = lhs[0][1]
+        for d in dims:
+            if d < len(shape):
+                k *= shape[d]
+    return 2.0 * res_elems * k
+
+
+def _op_bytes(op: Op, symtab, zero_cost=frozenset()) -> float:
+    if op.opcode in ZERO_BYTE_OPS:
+        return 0.0
+    res = _bytes_of(op.result_shapes)
+    if op.opcode in ("dynamic-slice", "gather", "slice"):
+        return res                      # slice read; consumer fuses on TPU
+    if op.opcode in ("dynamic-update-slice", "scatter"):
+        upd = (symtab.get(op.operand_names[1])
+               if len(op.operand_names) > 1 else None)
+        return 2.0 * (_bytes_of(upd) if upd else res)
+    if op.opcode == "copy" and op.operand_names:
+        src = symtab.get(op.operand_names[0])
+        if src and [s[1] for s in src] == [s[1] for s in op.result_shapes]:
+            return 0.0                  # carry double-buffer alias
+    operands = 0.0
+    for nm in op.operand_names:
+        if nm in zero_cost:
+            continue
+        shapes = symtab.get(nm)
+        if shapes:
+            operands += _bytes_of(shapes)
+    return operands + res
+
+
+def _fusion_bytes(op: Op, symtab, comps, classify_only: bool = False):
+    """HBM traffic of a fusion: params read + result written, EXCEPT that
+    params consumed only through dynamic-slice (and the in-place target of
+    dynamic-update-slice, whose output aliases the input) count by the
+    slice actually touched — the pattern every paged-KV append and scan
+    layer-slice lowers to."""
+    PASSTHROUGH = ("bitcast", "copy", "reshape", "transpose", "convert")
+    ELEMENTWISE = PASSTHROUGH + (
+        "parameter", "broadcast", "constant", "select", "compare", "add",
+        "iota", "multiply", "subtract", "and", "or", "xor",
+        "shift-right-logical", "shift-right-arithmetic", "shift-left",
+        "concatenate")
+    INT_STORAGE = {"s8", "u8", "s4", "u4", "s2", "u2"}
+    total_in = 0.0
+    big: set = set()
+    sliced = 0.0
+    big_shapes = []
+    pure_repack = True
+    elementwise_only = True
+    has_int_param = False
+    for cname in op.called:
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        # resolve pass-through renames (incl. dtype converts: the CPU
+        # backend wraps bf16 ops in f32 converts a TPU wouldn't emit)
+        alias = {}
+        for o in comp.ops:
+            if o.opcode in PASSTHROUGH and o.operand_names:
+                src = o.operand_names[0]
+                alias[o.name] = alias.get(src, src)
+            if o.opcode not in PASSTHROUGH and o.opcode not in (
+                    "parameter", "broadcast", "constant", "select",
+                    "compare", "add", "iota"):
+                pure_repack = False
+            if o.opcode not in ELEMENTWISE:
+                elementwise_only = False
+        def origin(nm):
+            return alias.get(nm, nm)
+        for o in comp.ops:
+            if o.opcode in ("dynamic-slice", "gather"):
+                tgt = origin(o.operand_names[0]) if o.operand_names else ""
+                if tgt in comp.params:
+                    big.add(tgt)
+                    big_shapes.append(comp.params[tgt])
+                    sliced += _bytes_of(o.result_shapes)
+            elif o.opcode in ("dynamic-update-slice", "scatter"):
+                tgt = origin(o.operand_names[0]) if o.operand_names else ""
+                if tgt in comp.params:
+                    big.add(tgt)
+                    big_shapes.append(comp.params[tgt])
+                upd_nm = (o.operand_names[1]
+                          if len(o.operand_names) > 1 else None)
+                upd = comp.params.get(upd_nm)
+                if upd is None:
+                    for oo in comp.ops:
+                        if oo.name == upd_nm:
+                            upd = oo.result_shapes
+                sliced += 2.0 * (_bytes_of(upd) if upd else 0.0)
+        for pname, pshape in comp.params.items():
+            if pname not in big:
+                total_in += _bytes_of(pshape)
+            if any(dt in INT_STORAGE for dt, _ in pshape):
+                has_int_param = True
+    # result: drop leaves that alias an in-place-updated big param
+    # (dims-only match: emulation may have changed the dtype)
+    res = 0.0
+    remaining = list(big_shapes)
+    dims_in = [[x[1] for x in comps[c].params[p]]
+               for c in op.called if c in comps
+               for p in comps[c].params]
+    for s in op.result_shapes:
+        match = next((i for i, bs in enumerate(remaining)
+                      if [x[1] for x in bs] == [s[1]]), None)
+        if match is not None:
+            remaining.pop(match)
+        elif pure_repack and [s[1]] in dims_in:
+            pass                         # pure convert/repack of an input
+        else:
+            res += _bytes_of([s])
+    if classify_only:
+        # True iff this fusion's RESULT is a no-HBM product on TPU
+        return (pure_repack and not sliced) or \
+            (elementwise_only and has_int_param and not sliced)
+    if pure_repack and not sliced:
+        return 0.0                       # whole fusion is emulation repack
+    if elementwise_only and has_int_param and not sliced:
+        # fused dequantization: on TPU the quant_gemv kernel streams the
+        # PACKED int weights straight into the MXU — the dequantized bf16
+        # copy this fusion writes never touches HBM.  Count the packed read.
+        return total_in
+    return total_in + sliced + res
+
+
+def analyze_text(text: str, fusible_last2=frozenset()) -> CostSummary:
+    """fusible_last2: set of (d_penultimate, d_last) dim pairs marking
+    attention-intermediate tensors (score/probability blocks and KV layout
+    copies).  HLO written by the jnp reference path materializes these to
+    HBM; the Pallas kernels (the TPU execution path) keep them in VMEM, so
+    their traffic is accumulated separately in `fusible_bytes` and the
+    roofline reports both raw and kernel-fused memory terms."""
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: the computation named main-ish or the last one
+        entry = next((n for n in comps if n.startswith("main")),
+                     list(comps)[-1] if comps else None)
+    summary = CostSummary()
+    if entry is None:
+        return summary
+
+    # which computations are fusion bodies (opaque for bytes)
+    fused = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fused.update(op.called)
+
+    def walk(comp_name: str, mult: float, count_bytes: bool, seen):
+        comp = comps.get(comp_name)
+        if comp is None or mult == 0:
+            return
+        symtab = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.result_shapes
+        # results of dequant/repack fusions never hit HBM on TPU (the
+        # Pallas quant_gemv / fused consumers read the packed form), so
+        # downstream ops must not re-count them as operands
+        zero_cost: set = set()
+        for op in comp.ops:
+            if op.opcode == "fusion" and _fusion_bytes(
+                    op, symtab, comps, classify_only=True):
+                zero_cost.add(op.name)
+        for op in comp.ops:
+            if op.opcode == "dot":
+                summary.flops += mult * _dot_flops(op, symtab)
+            is_coll = next((c for c in COLLECTIVES
+                            if op.opcode.startswith(c)), None)
+            if is_coll and not op.opcode.endswith("-done"):
+                payload = max((_bytes_of([s]) for s in op.result_shapes),
+                              default=0.0)
+                # -start ops carry (operand, result, ...) tuples
+                summary.collectives[is_coll] = \
+                    summary.collectives.get(is_coll, 0.0) + mult * payload
+                summary.collective_bytes += mult * payload
+            if count_bytes and comp_name not in fused:
+                if op.opcode == "fusion":
+                    b = mult * _fusion_bytes(op, symtab, comps)
+                else:
+                    b = mult * _op_bytes(op, symtab, zero_cost)
+                if b and _is_fusible(op, fusible_last2):
+                    summary.fusible_bytes += b
+                else:
+                    summary.bytes_accessed += b
+            if op.opcode == "while":
+                for c in op.called:
+                    walk(c, mult * op.trip_count, True, seen)
+            elif op.opcode == "fusion":
+                for c in op.called:
+                    walk(c, mult, False, seen)      # flops only
+            elif op.opcode in ("call", "conditional", "map", "reduce",
+                               "reduce-window", "sort", "custom-call"):
+                for c in op.called:
+                    walk(c, mult, False, seen)
+
+    walk(entry, 1.0, True, set())
+    return summary
+
+
+def _is_fusible(op: Op, fusible_last2) -> bool:
+    if not fusible_last2:
+        return False
+    for _, shape in op.result_shapes:
+        if len(shape) >= 2 and tuple(shape[-2:]) in fusible_last2:
+            return True
+    return False
+
+
+def analyze_compiled(compiled, fusible_last2=frozenset()) -> CostSummary:
+    return analyze_text(compiled.as_text(), fusible_last2)

@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def load(multi_pod: bool):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("multi_pod") == multi_pod:
+            rows.append(r)
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.1f}"
+
+
+def roofline_table(multi_pod: bool = False) -> str:
+    rows = load(multi_pod)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    out = ["| arch | shape | GiB/dev | compute ms | memory ms (raw) | "
+           "collective ms | bottleneck | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skipped: sub-quadratic-only shape | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"ERROR {r.get('error','')[:40]} | — |")
+            continue
+        roof = r["roofline"]
+        mem = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{mem.get('total_bytes', 0) / 2**30:.1f} | "
+            f"{fmt_ms(roof['compute_s'])} | {fmt_ms(roof['memory_s'])} "
+            f"({fmt_ms(roof['memory_raw_s'])}) | "
+            f"{fmt_ms(roof['collective_s'])} | {roof['bottleneck']} | "
+            f"{roof['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def summary_stats():
+    single = [r for r in load(False) if r["status"] == "ok"]
+    multi = [r for r in load(True) if r["status"] == "ok"]
+    sk = [r for r in load(False) if r["status"] == "skipped"]
+    print(f"single-pod ok: {len(single)}  multi-pod ok: {len(multi)}  "
+          f"skipped/mesh: {len(sk)}")
+    worst = sorted(
+        single, key=lambda r: -(r["roofline"]["memory_s"]
+                                + r["roofline"]["collective_s"])
+        / max(r["roofline"]["compute_s"], 1e-9))[:5]
+    print("\nworst roofline fraction (dominant/compute):")
+    for r in worst:
+        roof = r["roofline"]
+        print(f"  {r['arch']} × {r['shape']}: compute "
+              f"{fmt_ms(roof['compute_s'])} vs mem "
+              f"{fmt_ms(roof['memory_s'])} coll "
+              f"{fmt_ms(roof['collective_s'])}")
+    collb = sorted(single,
+                   key=lambda r: -r["roofline"]["collective_s"])[:5]
+    print("\nmost collective-bound:")
+    for r in collb:
+        roof = r["roofline"]
+        print(f"  {r['arch']} × {r['shape']}: coll "
+              f"{fmt_ms(roof['collective_s'])} "
+              f"({ {k: round(v/2**30, 1) for k, v in roof['collectives'].items()} } GiB)")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "table":
+        print(roofline_table(multi_pod=len(sys.argv) > 2))
+    else:
+        summary_stats()

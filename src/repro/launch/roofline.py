@@ -1,0 +1,160 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+All XLA metrics on an SPMD-partitioned program are PER-DEVICE (verified
+empirically: a (16×256)·(256×512) matmul on a 2×4 mesh reports 0.56 MFLOP
+= the per-shard work), so:
+
+    compute term    = flops_per_device            / peak_FLOP/s
+    memory term     = bytes_accessed_per_device   / HBM_bw
+    collective term = Σ collective operand bytes  / link_bw
+                      (operand sizes parsed from the optimized per-device
+                       HLO — equivalent to the assignment's global-bytes /
+                       (chips·link_bw) formulation)
+
+v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s2": 0.25, "u2": 0.25,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?|pred|token)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device operand bytes per collective kind from optimized HLO.
+
+    Uses the op RESULT type on the lhs of each collective instruction —
+    for -start ops the result is a tuple (operand, result, ...); we take
+    the max leaf as the payload proxy.
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # match only instruction definitions: "%name = type op-name(...)"
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        cm = _COLLECTIVE_RE.search(rhs.split("(")[0])
+        if not cm:
+            continue
+        kind = cm.group(1)
+        shapes = _SHAPE_RE.findall(rhs.split(")")[0].split("(")[0])
+        if not shapes:
+            continue
+        payload = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] = out.get(kind, 0.0) + payload
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    bytes_accessed: float        # per device (excl. kernel-fusible)
+    fusible_bytes: float         # attention intermediates (VMEM on TPU)
+    collective_bytes: float      # per device (summed operands)
+    collectives: Dict[str, float]
+    compute_s: float = 0.0
+    memory_s: float = 0.0        # fused-kernel memory term (the roofline)
+    memory_raw_s: float = 0.0    # jnp-path memory term (incl. fusible)
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0     # 6·N·D (or 2·N·D decode), global
+    useful_ratio: float = 0.0    # model_flops / (flops × chips)
+
+    def finalize(self, chips: int, model_flops: float = 0.0):
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.bytes_accessed / HBM_BW
+        self.memory_raw_s = (self.bytes_accessed
+                             + self.fusible_bytes) / HBM_BW
+        self.collective_s = self.collective_bytes / LINK_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.model_flops = model_flops
+        total_hlo = self.flops * chips
+        self.useful_ratio = (model_flops / total_hlo) if total_hlo else 0.0
+        return self
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, chips: int, model_flops: float = 0.0,
+            fusible_last2=frozenset()) -> Roofline:
+    """Derive per-device costs from the optimized HLO text via
+    launch/hlo_cost.py (XLA's aggregate cost_analysis counts while bodies
+    once — useless for scan-over-layers programs; verified empirically)."""
+    from repro.launch import hlo_cost
+    s = hlo_cost.analyze_compiled(compiled, fusible_last2)
+    return Roofline(
+        flops=s.flops, bytes_accessed=s.bytes_accessed,
+        fusible_bytes=s.fusible_bytes,
+        collective_bytes=s.collective_bytes, collectives=dict(s.collectives),
+    ).finalize(chips, model_flops)
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ms = compiled.memory_analysis()
+        return {
+            "argument_bytes": float(ms.argument_size_in_bytes),
+            "output_bytes": float(ms.output_size_in_bytes),
+            "temp_bytes": float(ms.temp_size_in_bytes),
+            "alias_bytes": float(ms.alias_size_in_bytes),
+            "total_bytes": float(ms.argument_size_in_bytes
+                                 + ms.output_size_in_bytes
+                                 + ms.temp_size_in_bytes
+                                 - ms.alias_size_in_bytes),
+        }
+    except Exception:
+        return {}
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N_active·D for train; 2·N_active per generated token (+KV reads
+    folded into memory, not FLOPs) for decode; 2·N_active·D prefill."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        flops = 2.0 * n_act * tokens
+        # attention score/attend FLOPs (quadratic part)
+        if cfg.n_heads:
+            flops += (4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head
+                      * shape.seq_len ** 2 * shape.global_batch * 0.5)
+        return flops
+    # decode: one token per sequence + attention over the KV cache
+    flops = 2.0 * n_act * shape.global_batch
+    if cfg.n_heads and cfg.family != "ssm":
+        flops += (4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head
+                  * shape.seq_len * shape.global_batch)
+    return flops

@@ -1,0 +1,70 @@
+"""Serving driver: batched requests through the KVNAND engine with
+continuous batching (see serving/scheduler.py).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+      --reduced --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import EngineConfig, get_config
+from repro.core.dse import recommend_engine_config
+from repro.models.registry import Model
+from repro.models.transformer import Runtime
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+def serve(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-context", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--use-dse", action="store_true",
+                    help="pick variant/quant from the Track-A DSE")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.use_dse:
+        eng = recommend_engine_config(args.arch, args.max_context)
+        eng = EngineConfig(**{**eng.__dict__, "page_tokens": 16,
+                              "uniform_lengths": False, "quant": "none"})
+        print(f"[serve] DSE picked variant={eng.variant}")
+    else:
+        eng = EngineConfig(page_tokens=16, uniform_lengths=False)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg, Runtime())
+    params = model.init(jax.random.PRNGKey(0))
+
+    batcher = ContinuousBatcher(cfg, params, batch_slots=args.slots,
+                                max_context=args.max_context, eng=eng,
+                                temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(4, 24))).tolist()
+        batcher.submit(Request(uid=uid, prompt=prompt,
+                               max_new=args.max_new))
+    t0 = time.time()
+    done = batcher.run_to_completion()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.output) for r in done.values())
+    print(f"[serve] {len(done)} requests, {total_tokens} tokens in "
+          f"{dt:.1f}s ({total_tokens / dt:.1f} tok/s on CPU)")
+    for uid in sorted(done)[:3]:
+        print(f"  req {uid}: {len(done[uid].output)} tokens -> "
+              f"{done[uid].output[:8]}...")
+    return done
+
+
+if __name__ == "__main__":
+    serve()

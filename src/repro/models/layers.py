@@ -1,0 +1,260 @@
+"""Core layers and the ParamBuilder (params + logical-axis specs in one pass).
+
+All parameters are plain pytrees (nested dicts of jnp arrays); a structurally
+identical tree of logical-axis tuples is built alongside, which
+`distributed.sharding` maps onto any mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# ParamBuilder
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Builds `params` and `specs` trees simultaneously.
+
+    Works under `jax.eval_shape` for allocation-free abstract init (the
+    dry-run path): all inits are jax PRNG ops, so tracing records shapes only.
+    """
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self._rng = rng
+        self.dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def _next_key(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def param(self, name: str, shape: Sequence[int],
+              axes: Sequence[Optional[str]], *, init: str = "normal",
+              scale: Optional[float] = None, dtype=None) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.dtype
+        if init == "zeros":
+            val = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, dtype)
+        else:  # fan-in scaled normal
+            if scale is None:
+                fan_in = shape[0] if len(shape) == 1 else shape[-2]
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            val = (jax.random.normal(self._next_key(), shape, jnp.float32)
+                   * scale).astype(dtype)
+        self.params[name] = val
+        self.specs[name] = tuple(axes)
+        return val
+
+    def scope(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._next_key(), self.dtype)
+        self.params[name] = sub.params
+        self.specs[name] = sub.specs
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(b: ParamBuilder, name: str, dim: int):
+    b.param(name, (dim,), ("norm",), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, d_head]; positions: [..., seq] (int)."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                  # [half]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]                   # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(b: ParamBuilder, name: str, in_dim: int, out_dim: int,
+               axes: Tuple[Optional[str], Optional[str]], bias: bool = False):
+    b.param(f"{name}_w", (in_dim, out_dim), axes)
+    if bias:
+        b.param(f"{name}_b", (out_dim,), (axes[1],), init="zeros")
+
+
+def dense(params: Dict[str, Any], name: str, x: jax.Array) -> jax.Array:
+    w = params[f"{name}_w"]
+    if type(w).__name__ == "QuantizedWeight":
+        from repro.kernels.quant_gemv import quant_gemv
+        y = quant_gemv(x, w)
+    else:
+        y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    b = params.get(f"{name}_b")
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def init_mlp(b: ParamBuilder, d_model: int, d_ff: int, gated: bool):
+    if gated:
+        init_dense(b, "gate", d_model, d_ff, ("embed", "mlp"))
+        init_dense(b, "up", d_model, d_ff, ("embed", "mlp"))
+    else:
+        init_dense(b, "up", d_model, d_ff, ("embed", "mlp"))
+    init_dense(b, "down", d_ff, d_model, ("mlp", "embed"))
+
+
+def mlp(params: Dict[str, Any], x: jax.Array, gated: bool) -> jax.Array:
+    if gated:
+        h = jax.nn.silu(dense(params, "gate", x)) * dense(params, "up", x)
+    else:
+        h = jax.nn.gelu(dense(params, "up", x))
+    return dense(params, "down", h)
+
+
+def _maybe_dequant(w, dtype):
+    if type(w).__name__ == "QuantizedWeight":
+        from repro.core.quant import dequantize
+        return dequantize(w, dtype)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (expert-parallel, capacity-based dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(b: ParamBuilder, d_model: int, d_ff: int, n_experts: int):
+    b.param("router_w", (d_model, n_experts), ("embed", None))
+    b.param("w_gate", (n_experts, d_model, d_ff), ("expert", "embed", "moe_mlp"))
+    b.param("w_up", (n_experts, d_model, d_ff), ("expert", "embed", "moe_mlp"))
+    b.param("w_down", (n_experts, d_ff, d_model), ("expert", "moe_mlp", "embed"))
+
+
+def moe(params: Dict[str, Any], x: jax.Array, *, top_k: int,
+        capacity_factor: float = 1.25) -> jax.Array:
+    """Capacity-based top-k MoE with expert-parallel grouped matmuls.
+
+    x: [B, S, D] -> [B, S, D].  Dispatch is *per batch row* so the dispatched
+    buffer [B, E, C, D] shards over both data (B) and model (E) axes — at
+    kimi-k2 scale (384 experts, 1M global tokens) a global dispatch buffer
+    would not fit.  Position-within-expert uses a sort-based ranking
+    (O(T·k) memory) instead of the classic one-hot cumsum (O(T·k·E)).
+    Tokens beyond an expert's capacity are dropped (standard in EP training).
+    """
+    B, S, D = x.shape
+    E = params["router_w"].shape[-1]
+    T = S
+    Tk = T * top_k
+    C = max(1, math.ceil(capacity_factor * top_k * T / E))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router_w"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                        # [B, S, E]
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)                # [B, S, k]
+    top_vals = top_vals / (jnp.sum(top_vals, -1, keepdims=True) + 1e-9)
+
+    def route_row(xt, idx, vals):
+        # xt: [T, D]; idx: [T, k]; vals: [T, k]
+        fe = idx.reshape(-1)                                       # [Tk]
+        order = jnp.argsort(fe, stable=True)
+        counts = jnp.zeros((E,), jnp.int32).at[fe].add(1)
+        starts = jnp.cumsum(counts) - counts                       # [E]
+        pos_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[fe[order]]
+        pos = jnp.zeros((Tk,), jnp.int32).at[order].set(pos_sorted)
+        keep = pos < C
+
+        tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+        slot = jnp.where(keep, fe * C + pos, E * C)                # drop -> OOB
+        dispatched = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].set(
+            xt[tok_ids])[:-1].reshape(E, C, D)
+        return dispatched, slot, keep, tok_ids
+
+    xt = x  # [B, T, D]
+    dispatched, slot, keep, tok_ids = jax.vmap(route_row)(
+        xt, top_idx, top_vals)                                     # [B, E, C, D]
+
+    # expert computation (grouped einsum; expert axis sharded -> EP)
+    wg, wu, wd = (_maybe_dequant(params[k], x.dtype)
+                  for k in ("w_gate", "w_up", "w_down"))
+    h = (jax.nn.silu(jnp.einsum("becd,edf->becf", dispatched, wg.astype(x.dtype)))
+         * jnp.einsum("becd,edf->becf", dispatched, wu.astype(x.dtype)))
+    out = jnp.einsum("becf,efd->becd", h, wd.astype(x.dtype))      # [B, E, C, D]
+
+    def combine_row(out_row, slot_row, keep_row, tok_row, vals):
+        out_flat = out_row.reshape(E * C, D)
+        safe = jnp.where(slot_row < E * C, slot_row, 0)
+        gathered = jnp.where(keep_row[:, None], out_flat[safe], 0.0)
+        weighted = gathered * vals.reshape(-1)[:, None].astype(out_flat.dtype)
+        return jnp.zeros((T, D), out_flat.dtype).at[tok_row].add(weighted)
+
+    combined = jax.vmap(combine_row)(out, slot, keep, tok_ids, top_vals)
+    return combined.reshape(B, S, D)
+
+
+def moe_aux_loss(params: Dict[str, Any], x: jax.Array, top_k: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (fraction·prob product)."""
+    E = params["router_w"].shape[-1]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router_w"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, top_idx = jax.lax.top_k(gates, top_k)
+    frac = jnp.mean(jax.nn.one_hot(top_idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    prob = jnp.mean(gates, axis=(0, 1))
+    return E * jnp.sum(frac * prob)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(b: ParamBuilder, vocab: int, d_model: int,
+                   name: str = "embedding"):
+    # 1/sqrt(d) keeps tied-lm-head logits O(1) at init
+    b.param(name, (vocab, d_model), ("vocab", "embed"),
+            scale=d_model ** -0.5)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       true_vocab: int) -> jax.Array:
+    """Mean CE over labels >= 0, masking padded vocab entries."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if true_vocab < V:
+        neg = jnp.full((V - true_vocab,), -1e9, logits.dtype)
+        logits = logits.at[..., true_vocab:].add(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

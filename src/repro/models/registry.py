@@ -1,0 +1,134 @@
+"""Model facade: build a config-driven model with init / train / serve entry
+points, plus `input_specs()` — ShapeDtypeStruct stand-ins for every input of
+every (arch × shape) cell (the dry-run contract; no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_config
+from repro.models import transformer
+from repro.models.transformer import Runtime
+
+
+class Model:
+    """Thin, stateless facade over the functional model zoo."""
+
+    def __init__(self, cfg: ModelConfig, rt: Optional[Runtime] = None):
+        self.cfg = cfg
+        self.rt = rt or Runtime()
+
+    # -- params ---------------------------------------------------------
+    def init(self, rng: jax.Array, dtype=jnp.float32):
+        params, _ = transformer.init_model(self.cfg, rng, dtype)
+        return params
+
+    def init_with_specs(self, rng: jax.Array, dtype=jnp.float32):
+        return transformer.init_model(self.cfg, rng, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return transformer.abstract_params(self.cfg, dtype)
+
+    # -- train ----------------------------------------------------------
+    def loss(self, params, batch, remat: str = "none"):
+        return transformer.loss_fn(params, self.cfg, batch, self.rt,
+                                   remat=remat)
+
+    def forward(self, params, batch, remat: str = "none"):
+        return transformer.forward_train(params, self.cfg, batch, self.rt,
+                                         remat=remat)
+
+
+def build_model(arch: str, rt: Optional[Runtime] = None) -> Model:
+    return Model(get_config(arch), rt)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — dry-run stand-ins (weak-type-correct, shardable, no alloc)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rt: Optional[Runtime] = None,
+                activ_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch × shape) cell.
+
+    train:   {tokens, labels}        [B, S] int32 (+ modality stubs)
+    prefill: {tokens}                [B, S] int32 (+ modality stubs)
+    decode:  {tokens}                [B, 1] int32 (+ cache built separately)
+    """
+    rt = rt or Runtime()
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+
+    if shape.kind == "train":
+        s_tok = S
+        if cfg.family == "vlm":
+            s_tok = S - rt.vlm_patches
+            specs["patches"] = _sds((B, rt.vlm_patches, cfg.d_model),
+                                    activ_dtype)
+        if cfg.n_meta_tokens:
+            s_tok = S - cfg.n_meta_tokens
+        if cfg.is_encoder_decoder:
+            specs["frames"] = _sds((B, S // rt.enc_frames_ratio, cfg.d_model),
+                                   activ_dtype)
+        specs["tokens"] = _sds((B, s_tok), jnp.int32)
+        specs["labels"] = _sds((B, s_tok), jnp.int32)
+    elif shape.kind == "prefill":
+        s_tok = S
+        if cfg.family == "vlm":
+            s_tok = S - rt.vlm_patches
+            specs["patches"] = _sds((B, rt.vlm_patches, cfg.d_model),
+                                    activ_dtype)
+        if cfg.n_meta_tokens:
+            s_tok = S - cfg.n_meta_tokens
+        if cfg.is_encoder_decoder:
+            specs["frames"] = _sds((B, S // rt.enc_frames_ratio, cfg.d_model),
+                                   activ_dtype)
+        specs["tokens"] = _sds((B, s_tok), jnp.int32)
+    else:  # decode: one new token against a seq_len-deep cache
+        specs["tokens"] = _sds((B, 1), jnp.int32)
+        specs["positions"] = _sds((B,), jnp.int32)
+    return specs
+
+
+def batch_sharding_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+    """Logical axes for each input (mapped to the mesh by sharding rules)."""
+    axes: Dict[str, Tuple] = {}
+    if shape.kind in ("train", "prefill"):
+        axes["tokens"] = ("batch", None)
+        if shape.kind == "train":
+            axes["labels"] = ("batch", None)
+        if cfg.family == "vlm":
+            axes["patches"] = ("batch", None, None)
+        if cfg.is_encoder_decoder:
+            axes["frames"] = ("batch", None, None)
+    else:
+        axes["tokens"] = ("batch", None)
+        axes["positions"] = ("batch",)
+    return axes
+
+
+def make_concrete_batch(cfg: ModelConfig, shape_or_specs, rng=None,
+                        rt: Optional[Runtime] = None) -> Dict[str, jax.Array]:
+    """Materialize a random batch matching input_specs (tests/examples)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    specs = (shape_or_specs if isinstance(shape_or_specs, dict)
+             else input_specs(cfg, shape_or_specs, rt))
+    out = {}
+    for name, sds in specs.items():
+        rng, k = jax.random.split(rng)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size,
+                                           sds.dtype)
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(
+                sds.dtype)
+    return out

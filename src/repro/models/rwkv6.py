@@ -1,0 +1,204 @@
+"""RWKV6 (Finch) — attention-free token mixing with data-dependent decay.
+
+Faithful structure: data-dependent token-shift (LoRA-modulated lerp), per-
+channel data-dependent decay w_t, bonus u, multi-head wkv state
+S ∈ [H, dh_k, dh_v], gated output with group norm.
+
+Numerical adaptation (documented in DESIGN.md): the log-decay is bounded to
+(-4.05, -0.05) via a sigmoid so the *chunked* parallel form (cumulative-
+product factorization, chunk=32) is overflow-free in fp32.  The recurrent
+oracle uses the same decay, so chunked == recurrent exactly (tested).
+
+wkv recurrence (per head, per step):
+    out_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, dense, init_dense
+
+LORA_RANK = 32
+CHUNK = 32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_rwkv_timemix(b: ParamBuilder, cfg: ModelConfig):
+    d = cfg.d_model
+    H, dh = cfg.n_heads, cfg.d_head
+    # data-dependent token shift: base lerp factors + low-rank modulation
+    b.param("mu_base", (5, d), (None, "ssm"), init="zeros")   # r,k,v,g,w
+    b.param("mu_x", (d,), ("ssm",), init="zeros")
+    b.param("lora_a", (d, LORA_RANK), ("embed", None), scale=0.01)
+    b.param("lora_b", (LORA_RANK, 5, d), (None, None, "ssm"), scale=0.01)
+    # decay + bonus
+    b.param("w0", (d,), ("ssm",), init="zeros")
+    b.param("wlora_a", (d, LORA_RANK), ("embed", None), scale=0.01)
+    b.param("wlora_b", (LORA_RANK, d), (None, "ssm"), scale=0.01)
+    b.param("u", (H, dh), (None, "ssm"), scale=0.5)
+    # projections
+    init_dense(b, "wr", d, d, ("embed", "heads"))
+    init_dense(b, "wk", d, d, ("embed", "heads"))
+    init_dense(b, "wv", d, d, ("embed", "heads"))
+    init_dense(b, "wg", d, d, ("embed", "heads"))
+    init_dense(b, "wo", d, d, ("heads", "embed"))
+    b.param("ln_scale", (d,), ("norm",), init="ones")  # post-wkv group norm
+
+
+def rwkv_state_shape(cfg: ModelConfig, batch: int) -> Tuple[int, ...]:
+    """Per-layer recurrent state: [B, H, dh_k, dh_v] (+ shift token [B, D])."""
+    return (batch, cfg.n_heads, cfg.d_head, cfg.d_head)
+
+
+# ---------------------------------------------------------------------------
+# shared projections
+# ---------------------------------------------------------------------------
+
+def _mix_inputs(p: Dict[str, Any], x: jax.Array, x_prev: jax.Array):
+    """Data-dependent lerp between current and shifted token (5 streams)."""
+    xx = x_prev - x                                           # [B, S, D]
+    xmix = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(xmix @ p["lora_a"].astype(x.dtype))       # [B, S, R]
+    deltas = jnp.einsum("bsr,rcd->bcsd", lora,
+                        p["lora_b"].astype(x.dtype))          # [B, 5, S, D]
+    mus = p["mu_base"].astype(x.dtype)[None, :, None, :] + deltas
+    mixed = x[:, None] + xx[:, None] * mus                    # [B, 5, S, D]
+    return [mixed[:, i] for i in range(5)]                    # r,k,v,g,w
+
+
+def _decay(p: Dict[str, Any], xw: jax.Array) -> jax.Array:
+    """Bounded per-channel log-decay in (-4.05, -0.05) (see module doc)."""
+    dw = jnp.tanh(xw @ p["wlora_a"].astype(xw.dtype)) @ \
+        p["wlora_b"].astype(xw.dtype)
+    logw = -0.05 - 4.0 * jax.nn.sigmoid(
+        p["w0"].astype(jnp.float32) + dw.astype(jnp.float32))
+    return logw                                               # [B, S, D]
+
+
+def _project_rkvg(p, cfg, xr, xk, xv, xg):
+    B, S, _ = xr.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    r = dense(p, "wr", xr).reshape(B, S, H, dh)
+    k = dense(p, "wk", xk).reshape(B, S, H, dh)
+    v = dense(p, "wv", xv).reshape(B, S, H, dh)
+    g = jax.nn.silu(dense(p, "wg", xg))
+    return r, k, v, g
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, H: int) -> jax.Array:
+    """Per-head layer norm of the wkv output ([B, S, H*dh])."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, H, D // H).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(B, S, D) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# wkv core: recurrent oracle + chunked parallel form
+# ---------------------------------------------------------------------------
+
+def wkv_recurrent(r, k, v, logw, u, state):
+    """Token-by-token scan (oracle + decode path).
+
+    r,k,v: [B, S, H, dh]; logw: [B, S, H, dh] (per k-channel);
+    u: [H, dh]; state: [B, H, dh, dh].  Returns (out [B,S,H,dh], state).
+    """
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+
+    def step(S0, inp):
+        rt, kt, vt, lw = inp                                   # [B, H, dh]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S0 + u[None, :, :, None] * kv)
+        S1 = jnp.exp(lw)[..., None] * S0 + kv
+        return S1, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in
+               (rf, kf, vf, logw.astype(jnp.float32)))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = CHUNK):
+    """Chunked parallel form (cumprod factorization); == recurrent."""
+    B, S, H, dh = r.shape
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zp(r), zp(k), zp(v), zp(logw)
+    Sp = r.shape[1]
+    n = Sp // chunk
+    shp = (B, n, chunk, H, dh)
+    rf, kf, vf, lw = (a.astype(jnp.float32).reshape(shp)
+                      for a in (r, k, v, logw))
+
+    # cumulative log-decay within chunk; a_t = exp(cum_t) (exclusive)
+    cum = jnp.cumsum(lw, axis=2)                              # inclusive
+    cum_excl = cum - lw                                        # exclusive
+    total = cum[:, :, -1]                                      # [B, n, H, dh]
+
+    r_a = rf * jnp.exp(cum_excl)                               # r_t · a_t
+    k_b = kf * jnp.exp(-cum)                                   # k_i / (a_i w_i)
+    k_last = kf * jnp.exp(total[:, :, None] - cum)             # for state update
+
+    # intra-chunk attention-like term: A[t,i] = (r_t a_t)·(k_i e^{-cum_i}), i<t
+    A = jnp.einsum("bnthd,bnihd->bnhti", r_a, k_b)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    intra = jnp.einsum("bnhti,bnihd->bnthd", A, vf)
+    # bonus term (current token through u)
+    diag = jnp.einsum("bnthk,hk,bnthk->bnth", rf, u, kf)
+    intra = intra + diag[..., None] * vf
+
+    # inter-chunk: out += (r_t a_t) S_chunk_start
+    def scan_chunks(S0, inp):
+        ra_c, kb_last_c, v_c, tot_c = inp
+        inter = jnp.einsum("bthk,bhkv->bthv", ra_c, S0)
+        kv = jnp.einsum("bthk,bthv->bhkv", kb_last_c, v_c)
+        S1 = jnp.exp(tot_c)[..., None] * S0 + kv
+        return S1, inter
+
+    xs = (r_a.transpose(1, 0, 2, 3, 4), k_last.transpose(1, 0, 2, 3, 4),
+          vf.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2, 3))
+    state, inters = jax.lax.scan(scan_chunks, state.astype(jnp.float32), xs)
+    out = intra + inters.transpose(1, 0, 2, 3, 4)
+    out = out.reshape(B, Sp, H, dh)[:, :S]
+    return out.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full time-mix layer
+# ---------------------------------------------------------------------------
+
+def rwkv_timemix(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
+                 state: jax.Array, shift: jax.Array, *,
+                 chunked: bool = True):
+    """x: [B,S,D]; state: [B,H,dh,dh]; shift: [B,D] (previous last token).
+
+    Returns (out [B,S,D], new_state, new_shift).
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    x_prev = jnp.concatenate([shift[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xg, xw = _mix_inputs(p, x, x_prev)
+    r, k, v, g = _project_rkvg(p, cfg, xr, xk, xv, xg)
+    logw = _decay(p, xw).reshape(B, S, H, cfg.d_head)
+    u = p["u"].astype(jnp.float32)
+
+    if chunked and S > 1:
+        from repro.kernels.wkv6 import wkv6  # lazy: kernels re-export ref
+        out, state = wkv6(r, k, v, logw, u, state)  # pallas on TPU
+    else:
+        out, state = wkv_recurrent(r, k, v, logw, u, state)
+    out = _group_norm(out.reshape(B, S, D), p["ln_scale"], H)
+    out = dense(p, "wo", out * g)
+    return out, state, x[:, -1]

@@ -1,0 +1,119 @@
+"""Selective SSM (Mamba-style) path — used by hymba's parallel heads.
+
+Recurrence (per channel d, state dim N):
+    h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t
+    y_t = C_t · h_t + D x_t ;  out = y ⊙ silu(z)
+
+Training uses a chunked scan with an intra-chunk associative scan (memory
+O(B·chunk·D·N) per step instead of O(B·S·D·N)); decode is an O(1) state
+update.  A short causal conv (k=4) precedes the SSM as in Mamba.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, dense, init_dense
+
+CONV_K = 4
+CHUNK = 64
+
+
+def init_ssm(b: ParamBuilder, cfg: ModelConfig):
+    d, n = cfg.d_model, cfg.ssm_state
+    init_dense(b, "in_x", d, d, ("embed", "heads"))
+    init_dense(b, "in_z", d, d, ("embed", "heads"))
+    b.param("conv_w", (CONV_K, d), (None, "ssm"), scale=0.5)
+    b.param("conv_b", (d,), ("ssm",), init="zeros")
+    init_dense(b, "w_b", d, n, ("embed", None))
+    init_dense(b, "w_c", d, n, ("embed", None))
+    init_dense(b, "w_dt", d, 1, ("embed", None), bias=True)
+    b.param("a_log", (d, n), ("ssm", None), init="zeros")
+    b.param("d_skip", (d,), ("ssm",), init="ones")
+    init_dense(b, "out", d, d, ("heads", "embed"))
+
+
+def ssm_state_shape(cfg: ModelConfig, batch: int) -> Tuple[int, ...]:
+    """[B, D, N] SSM state (+ [B, CONV_K-1, D] conv tail carried separately)."""
+    return (batch, cfg.d_model, cfg.ssm_state)
+
+
+def _conv(p: Dict[str, Any], x: jax.Array, tail: jax.Array):
+    """Causal depthwise conv; tail: [B, CONV_K-1, D] from previous segment."""
+    xt = jnp.concatenate([tail.astype(x.dtype), x], axis=1)   # [B, S+K-1, D]
+    w = p["conv_w"].astype(x.dtype)
+    out = sum(xt[:, i:i + x.shape[1]] * w[i] for i in range(CONV_K))
+    new_tail = xt[:, -(CONV_K - 1):] if CONV_K > 1 else tail
+    return jax.nn.silu(out + p["conv_b"].astype(x.dtype)), new_tail
+
+
+def _ssm_coeffs(p: Dict[str, Any], xc: jax.Array):
+    """a_t = exp(Δ_t A) [B,S,D,N]; b_t = Δ_t B_t x_t [B,S,D,N]; C_t [B,S,N]."""
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))               # [D, N]
+    dt = jax.nn.softplus(dense(p, "w_dt", xc).astype(jnp.float32))  # [B,S,1]
+    Bt = dense(p, "w_b", xc).astype(jnp.float32)               # [B,S,N]
+    Ct = dense(p, "w_c", xc).astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A[None, None])                 # [B,S,D,N]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * Bt[:, :, None, :]
+    return a, bx, Ct
+
+
+def selective_scan_chunked(a, bx, C, h0, chunk: int = CHUNK):
+    """h_t = a_t h_{t-1} + bx_t ; y_t = C_t · h_t.  Chunked associative scan."""
+    B, S, D, N = a.shape
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = a.shape[1]
+    nchunk = Sp // chunk
+    a_c = a.reshape(B, nchunk, chunk, D, N).transpose(1, 0, 2, 3, 4)
+    b_c = bx.reshape(B, nchunk, chunk, D, N).transpose(1, 0, 2, 3, 4)
+    C_c = C.reshape(B, nchunk, chunk, N).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        ac, bc, cc = inp                                       # [B,chunk,D,N]
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = acc_a * h[:, None] + acc_b                        # [B,chunk,D,N]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cc)
+        return hs[:, -1], y
+
+    h_end, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32),
+                             (a_c, b_c, C_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, D)[:, :S]
+    return y, h_end
+
+
+def ssm_mixer(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
+              state: jax.Array, conv_tail: jax.Array):
+    """Full Mamba-style path. x: [B,S,D] -> (out, new_state, new_conv_tail)."""
+    xz = dense(p, "in_z", x)
+    xc = dense(p, "in_x", x)
+    xc, new_tail = _conv(p, xc, conv_tail)
+    a, bx, Ct = _ssm_coeffs(p, xc)
+    y, h_end = selective_scan_chunked(a, bx, Ct, state)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    out = dense(p, "out", (y.astype(x.dtype)) * jax.nn.silu(xz))
+    return out, h_end, new_tail
+
+
+def ssm_decode_step(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
+                    state: jax.Array, conv_tail: jax.Array):
+    """Single-token O(1) update. x: [B,1,D]."""
+    xz = dense(p, "in_z", x)
+    xc = dense(p, "in_x", x)
+    xc, new_tail = _conv(p, xc, conv_tail)
+    a, bx, Ct = _ssm_coeffs(p, xc)
+    h = a[:, 0] * state.astype(jnp.float32) + bx[:, 0]         # [B,D,N]
+    y = jnp.einsum("bdn,bn->bd", h, Ct[:, 0])[:, None]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    out = dense(p, "out", y.astype(x.dtype) * jax.nn.silu(xz))
+    return out, h, new_tail

@@ -1,0 +1,22 @@
+"""Token sampling: greedy / temperature / top-k (vocab-mask aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, rng: jax.Array, *, true_vocab: int,
+           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits: [B, V_padded] -> token ids [B]."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if true_vocab < V:
+        pad = jnp.arange(V) >= true_vocab
+        logits = jnp.where(pad[None], -1e9, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -1e9, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

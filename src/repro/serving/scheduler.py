@@ -1,0 +1,131 @@
+"""Continuous-batching scheduler over the KVNAND engine.
+
+Host-side request management around the jit'd decode step:
+  * fixed decode batch of B slots; finished/empty slots are refilled from
+    the queue between steps (per-slot prefill into the paged pools);
+  * per-slot lengths are ragged → the engine's general (scatter) append
+    path (`uniform_lengths=False`);
+  * slot eviction = clearing host bookkeeping — its pages are simply
+    overwritten by the next occupant (per-sequence page stripes, the
+    access-aware reuse story of §IV-D).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EngineConfig, ModelConfig
+from repro.core.engine import KVNANDEngine
+from repro.models.transformer import Runtime
+from repro.serving.sampler import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_context: int = 512, eng: Optional[EngineConfig] = None,
+                 rt: Optional[Runtime] = None, temperature: float = 0.0,
+                 seed: int = 0):
+        eng = eng or EngineConfig(page_tokens=16, uniform_lengths=False)
+        self.cfg = cfg
+        self.engine = KVNANDEngine(cfg, eng, rt or Runtime())
+        self.params = params
+        self.B = batch_slots
+        self.max_context = max_context
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.cache = self.engine.init_cache(batch_slots, max_context)
+        self._lengths = np.zeros(batch_slots, np.int64)
+        self._decode = jax.jit(
+            lambda p, c, t: self.engine.decode_step(p, c, t))
+        self._prefill1 = jax.jit(
+            lambda p, b: self.engine.prefill(p, b, max_context),
+            static_argnames=())
+        self.completed: Dict[int, Request] = {}
+
+    # -- host-side slot management ------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self._prefill_slot(i, req)
+
+    def _prefill_slot(self, i: int, req: Request):
+        """Prefill one sequence and splice its pools/length into slot i."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, c1 = self._prefill1(self.params, {"tokens": toks})
+        self.cache = _splice_slot(self.cache, c1, i)
+        self._lengths[i] = len(req.prompt)
+        self.rng, k = jax.random.split(self.rng)
+        tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
+                         temperature=self.temperature)[0])
+        req.output.append(tok)
+
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].output[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens))
+        self.rng, k = jax.random.split(self.rng)
+        next_tokens = sample(logits, k, true_vocab=self.cfg.vocab_size,
+                             temperature=self.temperature)
+        self._lengths[active] += 1
+        for i in active:
+            req = self.slots[i]
+            req.output.append(int(next_tokens[i]))
+            if (len(req.output) >= req.max_new
+                    or self._lengths[i] + 1 >= self.max_context):
+                req.done = True
+                self.completed[req.uid] = req
+                self.slots[i] = None          # slot pages recycled in place
+                self._lengths[i] = 0
+        return len(active)
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed
+
+
+def _splice_slot(cache, one, i: int):
+    """Copy sequence 0 of a B=1 cache into slot i of the batch cache."""
+    import dataclasses as dc
+
+    updates = {}
+    for f in dc.fields(cache):
+        cur, new = getattr(cache, f.name), getattr(one, f.name)
+        if cur is None:
+            continue
+        # batch axis position: leaf layouts are [L, B, ...] or [B, ...]
+        if f.name in ("page_table_g", "page_pos_w", "lengths"):
+            updates[f.name] = cur.at[i].set(new[0])
+        else:
+            updates[f.name] = cur.at[:, i].set(new[:, 0])
+    return dc.replace(cache, **updates)

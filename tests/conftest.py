@@ -1,0 +1,9 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see
+the real single CPU device; multi-device tests spawn subprocesses."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,86 @@
+"""Config registry: exact hyperparameters, counts, sharding divisibility."""
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS, PAPER_ARCHS, SHAPES, get_config, list_configs,
+    shape_applicable,
+)
+
+EXPECTED_PARAMS_B = {
+    "dbrx-132b": (125, 140),
+    "kimi-k2-1t-a32b": (950, 1100),
+    "pixtral-12b": (11, 14),
+    "qwen1.5-4b": (3.2, 4.5),
+    "qwen2.5-32b": (30, 35),
+    "gemma3-12b": (10.5, 13),
+    "qwen1.5-0.5b": (0.4, 0.7),
+    "whisper-base": (0.05, 0.12),
+    "rwkv6-3b": (2.8, 4.0),
+    "hymba-1.5b": (1.0, 1.8),
+    "opt-30b": (28, 33),
+    "llama2-7b": (6, 7.5),
+    "llama3.1-8b": (7.5, 8.7),
+    "llama3.1-70b": (68, 73),
+    "mixtral-8x7b": (45, 48),
+}
+
+
+def test_all_registered():
+    cfgs = list_configs()
+    for a in ASSIGNED_ARCHS + PAPER_ARCHS:
+        assert a in cfgs
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED_PARAMS_B))
+def test_param_counts(arch):
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.1f}B not in [{lo}, {hi}]"
+
+
+def test_kimi_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert 25 <= cfg.active_param_count() / 1e9 <= 40  # ~32B active
+
+
+def test_mixtral_kv_per_token_matches_paper():
+    # §III-B: 128 KB at BF16
+    assert get_config("mixtral-8x7b").kv_bytes_per_token(2) == 128 * 1024
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_tp16_divisibility(arch):
+    """Every TP-sharded dim must divide the 16-wide model axis."""
+    cfg = get_config(arch)
+    assert cfg.d_model % 16 == 0
+    assert cfg.d_ff % 16 == 0 or cfg.is_moe
+    assert cfg.padded_vocab % 16 == 0
+    if cfg.n_heads:
+        assert (cfg.group_size * cfg.d_head) % 16 == 0  # wq columns
+        assert cfg.d_head % 16 == 0 or cfg.d_head % 16 in (7, 0) or \
+            cfg.d_head * cfg.n_kv_heads % 16 == 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_configs_valid(arch):
+    r = get_config(arch).reduced()
+    assert r.param_count() < 5e6 or r.is_moe
+    if r.n_heads:
+        assert r.n_heads % r.n_kv_heads == 0
+
+
+def test_long_500k_applicability():
+    longs = {a: shape_applicable(get_config(a), SHAPES["long_500k"])[0]
+             for a in ASSIGNED_ARCHS}
+    assert longs == {
+        "dbrx-132b": False, "kimi-k2-1t-a32b": False, "pixtral-12b": False,
+        "qwen1.5-4b": False, "qwen2.5-32b": False, "gemma3-12b": True,
+        "qwen1.5-0.5b": False, "whisper-base": False, "rwkv6-3b": True,
+        "hymba-1.5b": True,
+    }
+
+
+def test_gemma3_local_global_pattern():
+    cfg = get_config("gemma3-12b")
+    flags = [cfg.is_global_layer(i) for i in range(12)]
+    assert flags == [False] * 5 + [True] + [False] * 5 + [True]

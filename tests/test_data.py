@@ -1,0 +1,44 @@
+"""Data pipeline: determinism, skip-ahead resume, learnable structure."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, DataIterator, make_source
+
+
+def test_batches_deterministic():
+    cfg = DataConfig(seq_len=16, global_batch=4, vocab_size=97, seed=3)
+    a = make_source(cfg).batch(5)
+    b = make_source(cfg).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=97)
+    b = make_source(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_resume_skip_ahead_exact():
+    cfg = DataConfig(seq_len=8, global_batch=2, vocab_size=50, seed=1)
+    it = DataIterator(make_source(cfg))
+    seen = [next(it) for _ in range(5)]
+    cursor = it.state()
+    assert cursor == 5
+    it2 = DataIterator(make_source(cfg))
+    it2.restore(3)
+    np.testing.assert_array_equal(next(it2)["tokens"], seen[3]["tokens"])
+
+
+def test_markov_structure_learnable():
+    """80% of transitions follow the permutation — the structure a model
+    must learn (checked directly on the stream)."""
+    cfg = DataConfig(seq_len=256, global_batch=8, vocab_size=64, seed=0)
+    src = make_source(cfg)
+    b = src.batch(0)
+    follows = 0
+    total = 0
+    for row in b["tokens"]:
+        nxt = src.perm[row[:-1]]
+        follows += int(np.sum(nxt == row[1:]))
+        total += len(row) - 1
+    assert 0.7 < follows / total < 0.9

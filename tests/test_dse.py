@@ -1,0 +1,42 @@
+"""DSE framework: heatmaps, OOM blanks, paper takeaways, engine coupling."""
+from repro.configs import get_config
+from repro.core import dse, flashsim as fs
+
+
+def test_heatmap_shape_and_oom_blanks():
+    cfg = get_config("opt-30b")
+    grid = dse.heatmap(cfg, [1_000, 50_000, 100_000], total_dies=8,
+                       wbits=8, abits=8)
+    assert len(grid) == 8                       # 7 D-splits + C
+    # MHA at 100K with W8A8 KV overflows small G2 allocations -> blanks
+    import math
+    blanks = [name for name, row in grid.items()
+              if math.isinf(row[100_000])]
+    assert blanks, "expected OOM blanks for G2-starved configs"
+
+
+def test_weights_must_fit_g1():
+    """Large models are incompatible with too-few G1 dies (Fig 15 text)."""
+    cfg = get_config("llama3.1-70b")
+    p = [x for x in dse.sweep(cfg, [1_000], 8, 8, 8)
+         if x.system.startswith("KVNAND-D-(1+")]
+    assert all(x.oom for x in p)                # 70B W8 > 1 die capacity
+
+
+def test_takeaways():
+    t = dse.takeaways(get_config("opt-30b"), get_config("llama3.1-70b"))
+    assert all(t.values()), t
+
+
+def test_recommend_engine_config():
+    eng_long = dse.recommend_engine_config("llama3.1-70b", 100_000)
+    eng_short = dse.recommend_engine_config("llama3.1-70b", 128)
+    assert eng_long.quant in ("w4a16", "w8a8")
+    assert eng_short.variant in ("compact", "discrete")
+
+
+def test_best_config_prefers_bigger_g2_at_longer_ctx():
+    cfg = get_config("llama3.1-70b")
+    b_short = dse.best_discrete(cfg, 1_000, 8, 4, 16)
+    b_long = dse.best_discrete(cfg, 100_000, 8, 4, 16)
+    assert b_long.g2 > b_short.g2               # paper: 4 dies in G2 @100K

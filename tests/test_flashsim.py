@@ -1,0 +1,133 @@
+"""Track-A flash simulator vs the paper's own numbers (§III-B, §V)."""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import flashsim as fs
+
+
+def geomean(xs):
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+MODELS = ["opt-30b", "llama2-7b", "llama3.1-8b", "llama3.1-70b",
+          "mixtral-8x7b"]
+
+
+def _best_kvnand_tp(cfg, seq, W=16, A=16):
+    cands = [fs.kvnand_c(16, W, A)] + \
+        [fs.kvnand_d(g1, 8 - g1, W, A) for g1 in range(1, 8)]
+    return max(fs.decode_throughput(s, cfg, seq) for s in cands)
+
+
+def test_mixtral_kv_per_token():
+    # §III-B: KV_per_tk = 128 KB in BF16
+    assert fs.kv_bytes_per_token(get_config("mixtral-8x7b"), 16) \
+        == 128 * 1024
+
+
+def test_naive_kv_read_6_9ms():
+    # §III-B: 1K-ctx KV read over 4 dies' external BW ≈ 6.9 ms
+    mix = get_config("mixtral-8x7b")
+    die = fs.FlashDie()
+    t = fs.kv_bytes_layer(mix, 1024, 16) * mix.n_layers / (4 * die.ext_bw)
+    assert abs(t - 6.9e-3) < 0.4e-3
+
+
+def test_ffn_read_44ms():
+    # §III-B: Mixtral INT4 FFN (2 active experts) over 4 dies internal ≈ 44ms
+    mix = get_config("mixtral-8x7b")
+    die = fs.FlashDie()
+    expert = 3 * mix.d_model * mix.d_ff * 4 / 8
+    t = mix.n_layers * expert * 2 / (4 * die.int_bw)
+    assert abs(t - 44e-3) < 3e-3
+
+
+def test_internal_bandwidth_32gbs():
+    assert abs(fs.FlashDie().int_bw - 32e9) < 1.5e9
+
+
+def test_die_capacity_16gb():
+    # Table I: 132.75 Gb per die
+    assert abs(fs.FlashDie().capacity - 132.75e9 / 8) < 0.5e9
+
+
+def test_geomean_speedups_short_ctx():
+    """Fig 12 headline: 1.98×/1.94× geomean vs Base-1 at 128/1K (±15%)."""
+    for seq, target in ((128, 1.98), (1_000, 1.94)):
+        sp = []
+        for m in MODELS:
+            cfg = get_config(m)
+            b1 = fs.decode_throughput(fs.base1(16, 16), cfg, seq)
+            bb = _best_kvnand_tp(cfg, seq)
+            if b1 > 0:
+                sp.append(bb / b1)
+        g = geomean(sp)
+        assert abs(g - target) / target < 0.15, (seq, g, target)
+
+
+def test_geomean_speedup_10k_direction():
+    """At 10K the advantage grows (paper 2.05×; our bandwidth model is
+    within ~25% — divergence documented in EXPERIMENTS.md)."""
+    sp = []
+    for m in MODELS:
+        cfg = get_config(m)
+        b1 = fs.decode_throughput(fs.base1(16, 16), cfg, 10_000)
+        bb = _best_kvnand_tp(cfg, 10_000)
+        if b1 > 0:
+            sp.append(bb / b1)
+    g = geomean(sp)
+    assert 1.9 < g < 2.7
+
+
+def test_base1_oom_at_100k():
+    for m in MODELS:
+        assert fs.is_oom(fs.base1(16, 16), get_config(m), 100_000), m
+
+
+def test_kvnand_resolves_100k():
+    for m in MODELS:
+        cfg = get_config(m)
+        ok = any(not fs.is_oom(s, cfg, 100_000)
+                 for s in [fs.kvnand_c(16, 4, 16)]
+                 + [fs.kvnand_d(g, 16 - g, 4, 16) for g in range(4, 13)])
+        assert ok, m
+
+
+def test_8b_100k_throughput_order():
+    tp = _best_kvnand_tp(get_config("llama3.1-8b"), 100_000)
+    assert 5 <= tp <= 35          # paper: ~10 tokens/s
+
+
+def test_hg_pipeline_ablation_direction():
+    """Fig 14a: HG pipelining reduces latency (paper 82.4% @10K)."""
+    cfg = get_config("llama3.1-8b")
+    on = fs.decode_token_latency(fs.kvnand_d(4, 4, 16, 16, hg=True),
+                                 cfg, 10_000).total
+    off = fs.decode_token_latency(fs.kvnand_d(4, 4, 16, 16, hg=False),
+                                  cfg, 10_000).total
+    assert 0.75 < on / off < 0.97
+
+
+def test_page_mapping_ablation_matches_paper():
+    """Fig 14b: MHA-30B @100K attention-read time collapses to ~1.9%."""
+    cfg = get_config("opt-30b")
+    on = fs._attn_terms(fs.kvnand_c(16, 16, 16, mapping=True), cfg,
+                        100_000)[0]
+    off = fs._attn_terms(fs.kvnand_c(16, 16, 16, mapping=False), cfg,
+                         100_000)[0]
+    assert 0.01 < on / off < 0.035
+
+
+def test_energy_improves_with_context():
+    """Fig 16 trend: KVNAND energy advantage grows with context."""
+    cfg = get_config("llama2-7b")
+    ratios = []
+    for seq in (1_000, 10_000, 30_000):
+        e_kv = fs.decode_token_energy(fs.kvnand_c(16, 16, 16), cfg,
+                                      seq)["total"]
+        e_b1 = fs.decode_token_energy(fs.base1(16, 16), cfg, seq)["total"]
+        ratios.append(e_kv / e_b1)
+    assert ratios[0] > ratios[-1]
+    assert ratios[-1] < 1.0

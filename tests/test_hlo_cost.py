@@ -1,0 +1,85 @@
+"""HLO cost analyzer: trip-count multiplication, dot flops, collectives."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import analyze_text
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return analyze_text(c.as_text()).flops
+
+
+def test_scan_equals_unroll_flops():
+    D = 128
+    w = jax.ShapeDtypeStruct((8, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, D), jnp.float32)
+
+    def f_scan(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def f_unroll(w, x):
+        y = x
+        for i in range(8):
+            y = jnp.tanh(y @ w[i])
+        return y
+
+    expected = 8 * 2 * 4 * D * D
+    assert abs(_flops(f_scan, w, x) - expected) / expected < 0.01
+    assert abs(_flops(f_unroll, w, x) - expected) / expected < 0.01
+
+
+def test_nested_scan_multiplies():
+    D = 64
+    w = jax.ShapeDtypeStruct((4, 3, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((2, D), jnp.float32)
+
+    def f(w, x):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return jnp.tanh(ci @ wi), None
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    expected = 12 * 2 * 2 * D * D
+    assert abs(_flops(f, w, x) - expected) / expected < 0.01
+
+
+def test_fusible_hint_separates_score_traffic():
+    S, dh = 64, 32
+
+    def attn(q, k):
+        s = q @ k.T                    # [S, S] score matrix
+        return jax.nn.softmax(s, -1)
+
+    q = jax.ShapeDtypeStruct((S, dh), jnp.float32)
+    k = jax.ShapeDtypeStruct((S, dh), jnp.float32)
+    c = jax.jit(attn).lower(q, k).compile()
+    plain = analyze_text(c.as_text())
+    hinted = analyze_text(c.as_text(), frozenset({(S, S)}))
+    assert hinted.fusible_bytes > 0
+    assert hinted.bytes_accessed < plain.bytes_accessed
+    assert abs((hinted.bytes_accessed + hinted.fusible_bytes)
+               - (plain.bytes_accessed + plain.fusible_bytes)) < 1.0
+
+
+def test_bytes_scale_with_trip_count():
+    D = 128
+
+    def f(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        return jax.lax.scan(body, x, w)[0]
+
+    b8 = analyze_text(jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((4, D), jnp.float32)).compile().as_text())
+    b16 = analyze_text(jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((4, D), jnp.float32)).compile().as_text())
+    assert 1.5 < b16.bytes_accessed / b8.bytes_accessed < 2.5

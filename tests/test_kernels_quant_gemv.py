@@ -1,0 +1,67 @@
+"""Quantized GEMV kernel: sweep + hypothesis error bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import dequantize, quantize_weight
+from repro.kernels.quant_gemv import quant_gemv
+
+SWEEP = [
+    # M, D, F, scheme
+    (4, 256, 384, "w8a8"),
+    (4, 256, 384, "w4a16"),
+    (1, 512, 512, "w8a8"),
+    (1, 512, 512, "w4a16"),
+    (8, 128, 1024, "w4a16"),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_pallas_interpret_matches_ref(case):
+    M, D, F, scheme = case
+    w = jax.random.normal(jax.random.PRNGKey(1), (D, F)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(2), (M, D))
+    qw = quantize_weight(w, scheme)
+    y_ref = quant_gemv(x, qw, impl="ref")
+    y_pal = quant_gemv(x, qw, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               atol=6e-2, rtol=6e-2)
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_quant_error_bound(case):
+    M, D, F, scheme = case
+    w = jax.random.normal(jax.random.PRNGKey(1), (D, F)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(2), (M, D))
+    qw = quantize_weight(w, scheme)
+    exact = x @ w
+    approx = quant_gemv(x, qw, impl="ref")
+    rel = float(jnp.abs(approx - exact).max() / jnp.abs(exact).max())
+    assert rel < (0.05 if scheme == "w8a8" else 0.25), rel
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(2, 32).map(lambda x: 2 * x),
+       f=st.integers(1, 32),
+       scheme=st.sampled_from(["w8a8", "w4a16"]),
+       seed=st.integers(0, 2 ** 16))
+def test_dequant_roundtrip_bound(d, f, scheme, seed):
+    """Property: per-channel dequant error ≤ half an LSB of that channel."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (d, f))
+    qw = quantize_weight(w, scheme)
+    wd = dequantize(qw, jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=0)
+    lsb = amax / (127.0 if scheme == "w8a8" else 7.0)
+    err = jnp.max(jnp.abs(wd - w), axis=0)
+    assert bool(jnp.all(err <= 0.51 * lsb + 1e-7))
+
+
+def test_3d_headgroup_weights_roundtrip():
+    """Attention projections are [K, D, f]; per-(K, f) channel scales."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (4, 64, 32)) * 0.1
+    qw = quantize_weight(w, "w4a16")
+    assert qw.scale.shape == (4, 32)
+    wd = dequantize(qw, jnp.float32)
+    assert float(jnp.abs(wd - w).max() / jnp.abs(w).max()) < 0.12

@@ -1,0 +1,72 @@
+"""wkv6 kernel package: chunked jnp + Pallas-interpret vs recurrent oracle,
+swept over shapes/chunks (+ hypothesis on the bounded-decay domain)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.wkv6 import wkv6
+from repro.models.rwkv6 import wkv_chunked, wkv_recurrent
+
+SWEEP = [
+    # B, S, H, dh, chunk
+    (2, 77, 3, 32, 32),
+    (1, 64, 2, 64, 16),
+    (3, 33, 1, 16, 32),
+    (1, 128, 4, 64, 32),   # chunk > 32 overflows the cumprod (ops clamps)
+]
+
+
+def _inputs(B, S, H, dh, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    logw = -0.05 - 4.0 * jax.nn.sigmoid(
+        jax.random.normal(ks[3], (B, S, H, dh)))
+    u = jax.random.normal(ks[4], (H, dh)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, dh, dh)) * 0.1
+    return r, k, v, logw, u, s0
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_chunked_matches_recurrent(case):
+    B, S, H, dh, chunk = case
+    r, k, v, logw, u, s0 = _inputs(B, S, H, dh)
+    o1, s1 = wkv_recurrent(r, k, v, logw, u, s0)
+    o2, s2 = wkv_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_pallas_interpret_matches_recurrent(case):
+    B, S, H, dh, chunk = case
+    r, k, v, logw, u, s0 = _inputs(B, S, H, dh)
+    o1, s1 = wkv_recurrent(r, k, v, logw, u, s0)
+    o2, s2 = wkv6(r, k, v, logw, u, s0, impl="interpret", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=5e-4, rtol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(3, 90), seed=st.integers(0, 999))
+def test_state_chaining_property(s, seed):
+    """Splitting a sequence at any point and chaining states == one shot."""
+    B, H, dh = 1, 2, 16
+    r, k, v, logw, u, s0 = _inputs(B, s, H, dh, seed)
+    o_full, s_full = wkv_recurrent(r, k, v, logw, u, s0)
+    cut = max(1, s // 3)
+    o1, sm = wkv_chunked(r[:, :cut], k[:, :cut], v[:, :cut],
+                         logw[:, :cut], u, s0, chunk=16)
+    o2, s2 = wkv_chunked(r[:, cut:], k[:, cut:], v[:, cut:],
+                         logw[:, cut:], u, sm, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-3, rtol=1e-3)

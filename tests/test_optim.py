@@ -1,0 +1,68 @@
+"""AdamW vs a literal numpy reference; clipping; schedule; bf16 moments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import optimizer as opt
+
+
+def _np_adamw(p, g, m, v, step, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    delta = mhat / (np.sqrt(vhat) + eps)
+    if p.ndim >= 2:
+        delta = delta + wd * p
+    return p - lr * delta, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = opt.AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10 ** 9,
+                          min_lr_ratio=1.0)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    state = opt.init_adamw(params, cfg)
+    g = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    new_p, new_s, lr = opt.adamw_update(params, g, state, cfg)
+    for key in ("w", "b"):
+        ref, _, _ = _np_adamw(np.asarray(params[key]), np.asarray(g[key]),
+                              np.zeros_like(params[key]),
+                              np.zeros_like(params[key]), 1, 1e-2)
+        np.testing.assert_allclose(np.asarray(new_p[key]), ref, rtol=1e-5)
+    assert abs(float(lr) - 1e-2) < 1e-9
+
+
+def test_lr_schedule_shape():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(opt.lr_schedule(cfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 55, 100, 200)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6          # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6          # peak
+    assert lrs[2] > lrs[3] > lrs[4]          # cosine decay
+    assert abs(lrs[4] - 0.1) < 1e-6          # floor
+    assert abs(lrs[5] - 0.1) < 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - np.sqrt(90 + 160)) < 1e-4
+    assert abs(float(opt.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_bf16_moments_track_f32():
+    cfg32 = opt.AdamWConfig(lr=1e-3)
+    cfg16 = opt.AdamWConfig(lr=1e-3, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((8, 8))}
+    s32, s16 = opt.init_adamw(params, cfg32), opt.init_adamw(params, cfg16)
+    p32, p16 = params, params
+    for i in range(5):
+        g = {"w": jnp.full((8, 8), 0.1 * (i + 1))}
+        p32, s32, _ = opt.adamw_update(p32, g, s32, cfg32)
+        p16, s16, _ = opt.adamw_update(p16, g, s16, cfg16)
+    assert float(jnp.abs(p32["w"] - p16["w"]).max()) < 5e-3
