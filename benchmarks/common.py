@@ -3,6 +3,10 @@ import math
 import sys
 import time
 
+# every emit() lands here too, so the harness (benchmarks/run.py) can dump
+# machine-readable trajectory artifacts (e.g. BENCH_kernels.json)
+RECORDS = []
+
 
 def geomean(xs):
     xs = [x for x in xs if x > 0]
@@ -10,6 +14,8 @@ def geomean(xs):
 
 
 def emit(name: str, us_per_call: float, derived: str):
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                    "derived": derived})
     print(f"{name},{us_per_call:.3f},{derived}")
 
 

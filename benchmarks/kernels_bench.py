@@ -40,6 +40,25 @@ def run():
     emit("kernels/paged_attention_ref_4k", us,
          f"{kv_bytes / us / 1e3:.1f} GB/s kv stream cpu")
 
+    # quantized paged decode attention (kv8 / kv4 pools, fused dequant):
+    # the decode hot loop streams the packed codes + one f32 scale per
+    # page×head instead of bf16 pages — the bytes ratio is the paper axis
+    from repro.core.quant import quantize_kv_page
+    for fmt in ("kv8", "kv4"):
+        qk, sk = quantize_kv_page(kp.astype(jnp.float32), fmt)
+        qv, sv = quantize_kv_page(vp.astype(jnp.float32), fmt)
+        gq = jax.jit(lambda q_, k_, v_, b_, l_, ks_, vs_, fmt=fmt:
+                     paged_attention_partial(q_, k_, v_, b_, l_, impl="ref",
+                                             kv_quant=fmt, k_scale=ks_,
+                                             v_scale=vs_))
+        us, _ = time_fn(lambda: jax.block_until_ready(
+            gq(qd, qk, qv, base, length, sk, sv)))
+        q_bytes = 2 * (qk.size * qk.dtype.itemsize
+                       + sk.size * sk.dtype.itemsize)
+        emit(f"kernels/paged_attention_{fmt}_4k", us,
+             f"{q_bytes / us / 1e3:.1f} GB/s kv stream cpu; "
+             f"{kv_bytes / q_bytes:.2f}x fewer kv bytes/step vs bf16")
+
     # quantized GEMV
     D, F = 1024, 4096
     w = jax.random.normal(ks[0], (D, F)) * 0.05

@@ -1,9 +1,33 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and
+appends the kernel rows of each run to ``BENCH_kernels.json`` so kernel
+perf has a machine-readable trajectory across commits.
 """
+import json
+import pathlib
 import sys
+import time
 import traceback
+
+BENCH_KERNELS_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_kernels.json"
+
+
+def _write_kernels_artifact():
+    from benchmarks import common
+    rows = [r for r in common.RECORDS if r["name"].startswith("kernels/")]
+    if not rows:
+        return
+    runs = []
+    if BENCH_KERNELS_PATH.exists():
+        try:
+            runs = json.loads(BENCH_KERNELS_PATH.read_text())
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append({"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                 "rows": rows})
+    BENCH_KERNELS_PATH.write_text(json.dumps(runs, indent=2) + "\n")
 
 
 def main() -> None:
@@ -27,6 +51,7 @@ def main() -> None:
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}",
                   file=sys.stderr)
             traceback.print_exc()
+    _write_kernels_artifact()
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

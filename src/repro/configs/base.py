@@ -232,8 +232,9 @@ class EngineConfig:
     hg_pipeline: bool = False       # head-group pipelining (KVNAND-D dataflow)
     page_tokens: int = 64           # tokens per KV page (flash-page analogue)
     quant: str = "none"             # "none" | "w8a8" | "w4a16"
+    kv_quant: str = "none"          # "none" | "kv8" | "kv4" paged-KV format
     max_pages_per_seq: int = 0      # 0 -> derived from context length
-    kv_dtype: str = "bfloat16"      # KV cache storage dtype
+    kv_dtype: str = "bfloat16"      # KV cache storage dtype (kv_quant=none)
     uniform_lengths: bool = True    # static batching: lockstep appends
     attn_impl: str = "auto"         # "auto" | "pallas" | "ref" | "interpret"
     gemv_impl: str = "auto"
@@ -243,6 +244,13 @@ class EngineConfig:
     grad_compress: bool = False     # int8 cross-pod gradient compression
     optimizer_dtype: str = "float32"  # "float32" | "bfloat16" moments
     fsdp: bool = False              # shard params over data axis too
+
+    def __post_init__(self):
+        if self.kv_quant not in ("none", "kv8", "kv4"):
+            raise ValueError(f"unknown kv_quant {self.kv_quant!r}")
+        if self.kv_quant == "kv4" and self.page_tokens % 2:
+            raise ValueError("kv4 packs token pairs: page_tokens must be "
+                             f"even, got {self.page_tokens}")
 
 
 # ---------------------------------------------------------------------------

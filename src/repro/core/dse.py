@@ -26,22 +26,28 @@ class DSEPoint:
     seq: int
     latency: float            # s/token; inf = OOM
     oom: bool
+    kv_bits: int = 0          # stored KV page format (0 -> abits)
 
 
-def enumerate_configs(total_dies: int = 8, wbits: int = 4, abits: int = 16
-                      ) -> List[fs.SystemConfig]:
+# Track-B paged-KV formats as a DSE axis (0 = keep abits-wide KV, the
+# bf16 pool); mirrors how the paper's DSE already sweeps weight bits.
+KV_FORMATS = {0: "none", 8: "kv8", 4: "kv4"}
+
+
+def enumerate_configs(total_dies: int = 8, wbits: int = 4, abits: int = 16,
+                      kv_bits: int = 0) -> List[fs.SystemConfig]:
     out = []
     for g1 in range(1, total_dies):
         g2 = total_dies - g1
-        out.append(fs.kvnand_d(g1, g2, wbits, abits))
-    out.append(fs.kvnand_c(total_dies, wbits, abits))
+        out.append(fs.kvnand_d(g1, g2, wbits, abits, kv_bits=kv_bits))
+    out.append(fs.kvnand_c(total_dies, wbits, abits, kv_bits=kv_bits))
     return out
 
 
 def sweep(cfg: ModelConfig, seqs, total_dies: int = 8, wbits: int = 4,
-          abits: int = 16) -> List[DSEPoint]:
+          abits: int = 16, kv_bits: int = 0) -> List[DSEPoint]:
     points = []
-    for sys in enumerate_configs(total_dies, wbits, abits):
+    for sys in enumerate_configs(total_dies, wbits, abits, kv_bits):
         for seq in seqs:
             oom = fs.is_oom(sys, cfg, seq)
             lat = math.inf if oom else \
@@ -49,47 +55,73 @@ def sweep(cfg: ModelConfig, seqs, total_dies: int = 8, wbits: int = 4,
             points.append(DSEPoint(
                 sys.name, sys.weight_dies,
                 sys.kv_dies if sys.kind == "kvnand-d" else 0,
-                wbits, abits, seq, lat, oom))
+                wbits, abits, seq, lat, oom, kv_bits))
+    return points
+
+
+def sweep_kv_formats(cfg: ModelConfig, seqs, total_dies: int = 8,
+                     wbits: int = 4, abits: int = 16) -> List[DSEPoint]:
+    """Full sweep with the KV bit-width axis unlocked (none/kv8/kv4)."""
+    points = []
+    for kv_bits in KV_FORMATS:
+        points += sweep(cfg, seqs, total_dies, wbits, abits, kv_bits)
     return points
 
 
 def heatmap(cfg: ModelConfig, seqs, total_dies: int = 8, wbits: int = 4,
-            abits: int = 16) -> Dict[str, Dict[int, float]]:
+            abits: int = 16, kv_bits: int = 0) -> Dict[str, Dict[int, float]]:
     """{config_name: {seq: latency}} — Fig 15 layout (inf = OOM blank)."""
     grid: Dict[str, Dict[int, float]] = {}
-    for p in sweep(cfg, seqs, total_dies, wbits, abits):
+    for p in sweep(cfg, seqs, total_dies, wbits, abits, kv_bits):
         grid.setdefault(p.system, {})[p.seq] = p.latency
     return grid
 
 
 def best_config(cfg: ModelConfig, seq: int, total_dies: int = 8,
-                wbits: int = 4, abits: int = 16) -> Optional[DSEPoint]:
-    pts = [p for p in sweep(cfg, [seq], total_dies, wbits, abits)
+                wbits: int = 4, abits: int = 16,
+                kv_bits: int = 0) -> Optional[DSEPoint]:
+    pts = [p for p in sweep(cfg, [seq], total_dies, wbits, abits, kv_bits)
            if not p.oom]
     return min(pts, key=lambda p: p.latency) if pts else None
 
 
 def recommend_engine_config(arch: str, seq: int, *,
-                            total_dies: int = 16) -> EngineConfig:
+                            total_dies: int = 16,
+                            allow_kv_quant: bool = True) -> EngineConfig:
     """Map the Track-A DSE winner onto Track-B engine knobs:
 
     KVNAND-D winner  -> discrete plan (HG pipelining on)
     KVNAND-C winner  -> compact plan
     W4A16 vs W8A8    -> whichever quantization wins at this context
+    kv8/kv4 pages    -> cheapest KV format, but fidelity-guarded: the
+                        bandwidth model is monotone in kv_bits (fewer
+                        bits never slows it down), so among candidates
+                        within `kv_fidelity_margin` of the best latency
+                        the WIDEST format wins.  Low-bit KV is only
+                        recommended where KV traffic actually dominates
+                        (long context), not as a blanket downgrade.
     """
     cfg = get_config(arch)
+    kv_axis = tuple(KV_FORMATS) if allow_kv_quant else (0,)
+    kv_fidelity_margin = 1.05
     candidates = []
     for wbits, abits, quant in ((4, 16, "w4a16"), (8, 8, "w8a8")):
-        p = best_config(cfg, seq, total_dies, wbits, abits)
-        if p is not None:
-            candidates.append((p.latency, p, quant))
+        for kv_bits in kv_axis:
+            p = best_config(cfg, seq, total_dies, wbits, abits, kv_bits)
+            if p is not None:
+                candidates.append((p.latency, p, quant))
     if not candidates:
         # nothing fits the flash budget — compact + max quantization
-        return EngineConfig(variant="compact", quant="w4a16")
-    _, p, quant = min(candidates)
+        return EngineConfig(variant="compact", quant="w4a16",
+                            kv_quant="kv4" if allow_kv_quant else "none")
+    best_lat = min(c[0] for c in candidates)
+    near = [c for c in candidates if c[0] <= best_lat * kv_fidelity_margin]
+    _, p, quant = max(near, key=lambda c: (c[1].kv_bits == 0, c[1].kv_bits,
+                                           -c[0]))
     variant = "discrete" if p.system.startswith("KVNAND-D") else "compact"
     return EngineConfig(variant=variant, quant=quant,
-                        hg_pipeline=(variant == "discrete"))
+                        hg_pipeline=(variant == "discrete"),
+                        kv_quant=KV_FORMATS[p.kv_bits])
 
 
 def best_discrete(cfg: ModelConfig, seq: int, total_dies: int = 8,

@@ -29,7 +29,6 @@ base offsets carried as scanned index arrays.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -48,8 +47,8 @@ from repro.models.transformer import Runtime, embed_inputs, lm_head_logits
 
 STATE_LEAVES = ("rwkv_state", "rwkv_shift", "rwkv_shift2", "ssm_state",
                 "conv_tail")
-POOL_G = ("k_pages_g", "v_pages_g")
-POOL_W = ("k_pages_w", "v_pages_w")
+POOL_G = ("k_pages_g", "v_pages_g", "k_scale_g", "v_scale_g")
+POOL_W = ("k_pages_w", "v_pages_w", "k_scale_w", "v_scale_w")
 
 
 # ---------------------------------------------------------------------------
@@ -156,17 +155,21 @@ class KVNANDEngine:
     # paged attention dispatch (single device vs sharded combine)
     # ------------------------------------------------------------------
     def _paged_attn(self, q, kp, vp, base, length, plan: ShardPlan,
-                    pool: str, window):
+                    pool: str, window, ks=None, vs=None):
+        """ks/vs: per-page×head dequant scales (None -> bf16 pool)."""
+        kv_quant = self.eng.kv_quant if ks is not None else "none"
         page_axes = plan.page_axes_g if pool == "g" else plan.page_axes_w
         if self.mesh is None or self.mesh.size == 1 or not page_axes:
             o, _, _ = paged_attention_partial(
                 q, kp, vp, base, length, window=window,
-                impl=self.eng.attn_impl)
+                impl=self.eng.attn_impl, kv_quant=kv_quant,
+                k_scale=ks, v_scale=vs)
             return o
         return seqpar.paged_decode_attention_sharded(
             q, kp, vp, base, length, self.mesh, window=window,
             batch_axes=plan.batch_axes, page_axes=page_axes,
-            impl=self.eng.attn_impl)
+            impl=self.eng.attn_impl, kv_quant=kv_quant,
+            k_scale=ks, v_scale=vs)
 
     # ------------------------------------------------------------------
     # in-place pool ops (pools carried through the layer scan)
@@ -198,17 +201,17 @@ class KVNANDEngine:
     # ------------------------------------------------------------------
     # per-layer attention (compact vs discrete)
     # ------------------------------------------------------------------
-    def _attend_compact(self, pl_, x_norm, kp, vp, base, lengths, plan,
-                        pool, window):
+    def _attend_compact(self, pl_, x_norm, kp, vp, ks, vs, base, lengths,
+                        plan, pool, window):
         """Fused QKV gen + attention (KVNAND-C, Fig 10b).  kp/vp are the
-        already-appended layer slices."""
+        already-appended layer slices (+scales when the pool is quantized)."""
         q, _, _ = attn_mod.project_qkv(pl_["attn"], self.cfg, x_norm,
                                        lengths[:, None])
         return self._paged_attn(q[:, 0], kp, vp, base, lengths + 1, plan,
-                                pool, window)
+                                pool, window, ks, vs)
 
-    def _attend_discrete(self, pl_, x_norm, kp, vp, base, lengths, plan,
-                         pool, window):
+    def _attend_discrete(self, pl_, x_norm, kp, vp, ks, vs, base, lengths,
+                         plan, pool, window):
         """Head-group pipelined attention (KVNAND-D, Fig 10a): q-GEMV of
         group i+1 is independent of group i's attention -> overlapped."""
         cfg = self.cfg
@@ -222,8 +225,12 @@ class KVNANDEngine:
             # slice head group i on the K dim directly (no pool transpose)
             kp_i = jax.lax.dynamic_slice_in_dim(kp, i, 1, 1)
             vp_i = jax.lax.dynamic_slice_in_dim(vp, i, 1, 1)
+            ks_i = vs_i = None
+            if ks is not None:
+                ks_i = jax.lax.dynamic_slice_in_dim(ks, i, 1, 1)
+                vs_i = jax.lax.dynamic_slice_in_dim(vs, i, 1, 1)
             o = self._paged_attn(q_cur, kp_i, vp_i, base, lengths + 1,
-                                 plan, pool, window)         # [B, G, dh]
+                                 plan, pool, window, ks_i, vs_i)  # [B, G, dh]
             return q_next, o
 
         q0 = attn_mod.project_q_group(pl_["attn"], cfg, x_tok,
@@ -260,13 +267,34 @@ class KVNANDEngine:
         page_axes = (plan.page_axes_w if use_window else plan.page_axes_g)
         sharded = (self.mesh is not None and self.mesh.size > 1
                    and bool(page_axes))
+        fmt = self.eng.kv_quant
+        ksname = "k_scale_w" if use_window else "k_scale_g"
+        vsname = "v_scale_w" if use_window else "v_scale_g"
         if sharded and self.eng.uniform_lengths:
             # append INSIDE the owning shard (paper: direct G2-die write);
             # a pjit-level update on the sharded page dim lowers to a
             # full-pool ownership select per layer (§Perf iteration 2)
-            pools[kname], pools[vname] = seqpar.sharded_append_uniform(
-                pools[kname], pools[vname], idx, k1, v1, phys, slot,
-                self.mesh, batch_axes=plan.batch_axes, page_axes=page_axes)
+            if fmt != "none":
+                (pools[kname], pools[vname], pools[ksname],
+                 pools[vsname]) = seqpar.sharded_append_uniform(
+                    pools[kname], pools[vname], idx, k1, v1, phys, slot,
+                    self.mesh, batch_axes=plan.batch_axes,
+                    page_axes=page_axes, k_scale=pools[ksname],
+                    v_scale=pools[vsname], kv_quant=fmt)
+            else:
+                pools[kname], pools[vname] = seqpar.sharded_append_uniform(
+                    pools[kname], pools[vname], idx, k1, v1, phys, slot,
+                    self.mesh, batch_axes=plan.batch_axes,
+                    page_axes=page_axes)
+        elif fmt != "none":
+            # page-granular requantizing append (tentpole write path)
+            append = (paged_kv.append_token_quant_uniform
+                      if self.eng.uniform_lengths
+                      else paged_kv.append_token_quant)
+            pools[kname], pools[ksname] = append(
+                pools[kname], pools[ksname], idx, phys, slot, k1, fmt)
+            pools[vname], pools[vsname] = append(
+                pools[vname], pools[vsname], idx, phys, slot, v1, fmt)
         else:
             pools[kname] = self._append_token(pools[kname], idx, phys, slot,
                                               k1)
@@ -274,11 +302,15 @@ class KVNANDEngine:
                                               v1)
         kp = self._layer_slice(pools[kname], idx)
         vp = self._layer_slice(pools[vname], idx)
+        ks = vs = None
+        if fmt != "none":
+            ks = self._layer_slice(pools[ksname], idx)
+            vs = self._layer_slice(pools[vsname], idx)
 
         attend = (self._attend_discrete
                   if self.eng.variant == "discrete" or self.eng.hg_pipeline
                   else self._attend_compact)
-        o = attend(pl_, h, kp, vp, base, lengths, plan,
+        o = attend(pl_, h, kp, vp, ks, vs, base, lengths, plan,
                    "w" if use_window else "g", window)
         aout = attn_mod.project_out(pl_["attn"], cfg, o[:, None])
         return h, aout, pools
@@ -444,14 +476,38 @@ class KVNANDEngine:
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
-    def prefill(self, params, batch: Dict[str, jax.Array], max_context: int):
+    def prefill(self, params, batch: Dict[str, jax.Array], max_context: int,
+                prompt_len: Optional[jax.Array] = None):
         """Full-prompt prefill.  Returns (last-token logits, primed cache).
 
         Attention runs compute-bound (ring/flash — the paper's NPU prefill);
-        the K/V stream is page-packed into the pools (Fig 7a)."""
+        the K/V stream is page-packed into the pools (Fig 7a).
+
+        prompt_len: traced scalar count of VALID tokens in batch["tokens"]
+        (uniform across the batch).  When given, the trailing tokens are
+        bucket padding (scheduler recompile avoidance): logits are gathered
+        at the true last token, `lengths` reflect the true length, and the
+        window-ring fill walks only real source pages so padding never
+        evicts live KV.  Unsupported for recurrent state (ssm/hybrid),
+        where padded tokens would pollute the carried state.
+        """
         cfg, rt = self.cfg, self.rt
+        if prompt_len is not None and cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"{cfg.family}: bucketed prefill would fold padding into "
+                "recurrent state; pass exact-length prompts instead")
+        if prompt_len is not None and self.mesh is not None \
+                and self.mesh.size > 1:
+            raise ValueError("bucketed prefill is a single-host scheduler "
+                             "feature; sharded fills take exact lengths")
         x, positions = embed_inputs(params, cfg, batch, rt)
         B, S = x.shape[:2]
+        if prompt_len is None:
+            self._true_S = None
+        else:
+            # prefix = frontend tokens (patches/meta) prepended by embed
+            prefix = S - batch["tokens"].shape[1]
+            self._true_S = jnp.asarray(prompt_len, jnp.int32) + prefix
         enc_out = None
         enc_len = 0
         if cfg.is_encoder_decoder:
@@ -499,12 +555,24 @@ class KVNANDEngine:
         updates: Dict[str, Any] = dict(pools)
         updates.update(states)
         updates.update(cross)
-        updates["lengths"] = jnp.full((B,), S, jnp.int32)
+        if self._true_S is None:
+            updates["lengths"] = jnp.full((B,), S, jnp.int32)
+            x_last = x[:, -1:]
+        else:
+            updates["lengths"] = jnp.broadcast_to(self._true_S, (B,)
+                                                  ).astype(jnp.int32)
+            x_last = jax.lax.dynamic_slice_in_dim(x, self._true_S - 1, 1, 1)
         if cache.page_pos_w is not None:
-            updates["page_pos_w"] = self._prefill_window_pos(
-                S, cache.page_pos_w.shape[1], B)
+            NPw = cache.page_pos_w.shape[1]
+            if self._true_S is None:
+                updates["page_pos_w"] = self._prefill_window_pos(S, NPw, B)
+            else:
+                vals = paged_kv.window_page_positions_dyn(
+                    self._true_S, NPw, self.eng.page_tokens)
+                updates["page_pos_w"] = jnp.broadcast_to(vals[None],
+                                                         (B, NPw))
         cache = dataclasses.replace(cache, **updates)
-        logits = lm_head_logits(params, cfg, x[:, -1:])[:, 0]
+        logits = lm_head_logits(params, cfg, x_last)[:, 0]
         return logits, cache
 
     def _prefill_window_pos(self, S: int, NPw: int, B: int):
@@ -530,32 +598,61 @@ class KVNANDEngine:
         use_window = (cfg.window is not None) and not is_glob
         plan = self._prefill_plan
         sharded = self.mesh is not None and self.mesh.size > 1
+        fmt = self.eng.kv_quant
+
+        def fill_pair(suffix, fill):
+            """Apply `fill(pool, kv[, scale])` to the K then V pool;
+            quantized fills return (pool, scale)."""
+            for prefix, kv_seq in (("k", k), ("v", v)):
+                name = f"{prefix}_pages_{suffix}"
+                sname = f"{prefix}_scale_{suffix}"
+                if fmt != "none":
+                    pools[name], pools[sname] = fill(pools[name], kv_seq,
+                                                     pools[sname])
+                else:
+                    pools[name] = fill(pools[name], kv_seq, None)
+
         if use_window:
             if sharded and plan.page_axes_w:
-                fill = functools.partial(
-                    seqpar.sharded_window_fill, mesh=self.mesh,
-                    batch_axes=plan.batch_axes,
-                    page_axes=plan.page_axes_w)
-                pools["k_pages_w"] = fill(pools["k_pages_w"], k, w_idx)
-                pools["v_pages_w"] = fill(pools["v_pages_w"], v, w_idx)
+                def fill(pool, kv_seq, scale):
+                    return seqpar.sharded_window_fill(
+                        pool, kv_seq, w_idx, mesh=self.mesh,
+                        batch_axes=plan.batch_axes,
+                        page_axes=plan.page_axes_w, scale=scale,
+                        kv_quant=fmt)
+            elif self._true_S is not None:
+                # bucketed prompt: walk only REAL source pages of the ring
+                def fill(pool, kv_seq, scale):
+                    return paged_kv.fill_window_at_dyn(
+                        pool, kv_seq, w_idx, self._true_S, scale=scale,
+                        kv_quant=fmt)
+            elif fmt != "none":
+                def fill(pool, kv_seq, scale):
+                    return paged_kv.fill_window_at_quant(pool, scale,
+                                                         kv_seq, w_idx, fmt)
             else:
-                pools["k_pages_w"] = paged_kv.fill_window_at(
-                    pools["k_pages_w"], k, w_idx)
-                pools["v_pages_w"] = paged_kv.fill_window_at(
-                    pools["v_pages_w"], v, w_idx)
+                def fill(pool, kv_seq, scale):
+                    return paged_kv.fill_window_at(pool, kv_seq, w_idx)
+            fill_pair("w", fill)
         else:
+            # global pool: bucket padding needs no dyn fill — padded pages
+            # land after the true length and stay masked by `lengths`
             if sharded and plan.page_axes_g:
-                fill = functools.partial(
-                    seqpar.sharded_prefill_fill, mesh=self.mesh,
-                    batch_axes=plan.batch_axes,
-                    page_axes=plan.page_axes_g)
-                pools["k_pages_g"] = fill(pools["k_pages_g"], k, g_idx)
-                pools["v_pages_g"] = fill(pools["v_pages_g"], v, g_idx)
+                def fill(pool, kv_seq, scale):
+                    return seqpar.sharded_prefill_fill(
+                        pool, kv_seq, g_idx, mesh=self.mesh,
+                        batch_axes=plan.batch_axes,
+                        page_axes=plan.page_axes_g, scale=scale,
+                        kv_quant=fmt)
+            elif fmt != "none":
+                def fill(pool, kv_seq, scale):
+                    return paged_kv.fill_prefill_at_quant(pool, scale,
+                                                          kv_seq, g_idx,
+                                                          fmt)
             else:
-                pools["k_pages_g"] = paged_kv.fill_prefill_at(
-                    pools["k_pages_g"], k, g_idx)
-                pools["v_pages_g"] = paged_kv.fill_prefill_at(
-                    pools["v_pages_g"], v, g_idx)
+                def fill(pool, kv_seq, scale):
+                    return paged_kv.fill_prefill_at(pool, kv_seq, g_idx)
+            fill_pair("g", fill)
 
         if cfg.family == "hybrid":
             state0 = jnp.zeros(states["ssm_state"].shape[1:], jnp.float32)

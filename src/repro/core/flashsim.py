@@ -115,6 +115,12 @@ class SystemConfig:
     die: FlashDie = FlashDie()
     npu: NPU = NPU()
     dram: DRAM = DRAM()
+    kv_bits: int = 0                 # KV page format; 0 -> abits (bf16-ish)
+
+    @property
+    def kv_bits_eff(self) -> int:
+        """Stored KV bits: the Track-B kv8/kv4 page formats, else abits."""
+        return self.kv_bits or self.abits
 
     @property
     def total_ifc_dies(self) -> int:
@@ -133,14 +139,19 @@ def base2(wbits=4, abits=16) -> SystemConfig:
     return SystemConfig("Base-2", "base2", 8, 8, wbits, abits)
 
 
-def kvnand_d(g1=8, g2=8, wbits=4, abits=16, hg=True, mapping=True):
-    return SystemConfig(f"KVNAND-D-({g1}+{g2})", "kvnand-d", g1, g2,
-                        wbits, abits, hg, mapping)
+def kvnand_d(g1=8, g2=8, wbits=4, abits=16, hg=True, mapping=True,
+             kv_bits=0):
+    name = f"KVNAND-D-({g1}+{g2})"
+    if kv_bits:
+        name += f"-kv{kv_bits}"
+    return SystemConfig(name, "kvnand-d", g1, g2,
+                        wbits, abits, hg, mapping, kv_bits=kv_bits)
 
 
-def kvnand_c(n=16, wbits=4, abits=16, mapping=True):
-    return SystemConfig(f"KVNAND-C-{n}", "kvnand-c", n, n, wbits, abits,
-                        True, mapping)
+def kvnand_c(n=16, wbits=4, abits=16, mapping=True, kv_bits=0):
+    name = f"KVNAND-C-{n}" + (f"-kv{kv_bits}" if kv_bits else "")
+    return SystemConfig(name, "kvnand-c", n, n, wbits, abits,
+                        True, mapping, kv_bits=kv_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +201,7 @@ def _gemv_time(die: FlashDie, n_dies: int, wb: float, wbits: int) -> float:
 def _attn_terms(sys: SystemConfig, cfg: ModelConfig, seq: int):
     """Per-layer Logit+Attend (time, transfer_bytes) on the KV medium."""
     die, npu = sys.die, sys.npu
-    kvb = kv_bytes_layer(cfg, seq, sys.abits)      # K+V bytes
+    kvb = kv_bytes_layer(cfg, seq, sys.kv_bits_eff)   # K+V bytes
     macs = 2 * cfg.n_heads * seq * cfg.d_head      # logit + attend
     # softmax traffic: logits to NPU and probs back (KVNAND), h×seq each
     sm_bytes = 2 * cfg.n_heads * seq * sys.abits / 8
@@ -219,14 +230,14 @@ def _no_mapping_amplification(sys: SystemConfig, cfg: ModelConfig) -> float:
     """Without §IV-D mapping each 256 B KV unit costs a whole page read
     (+ECC) and random plane conflicts break the multi-plane pipeline
     (calibrated queueing factor 3×, cf. Fig 14b)."""
-    unit = cfg.d_head * sys.abits / 8
+    unit = cfg.d_head * sys.kv_bits_eff / 8
     page = sys.die.page_bytes + sys.die.ecc_bytes
     return (page / unit) * 3.0
 
 
 def _kv_write_time(sys: SystemConfig, cfg: ModelConfig) -> float:
     """Per-token KV append, amortized over buffered page-sized flushes."""
-    b = kv_bytes_per_token(cfg, sys.abits)
+    b = kv_bytes_per_token(cfg, sys.kv_bits_eff)
     if sys.kind == "base1":
         return b / sys.dram.bw
     n = sys.kv_dies if sys.kind != "kvnand-c" else sys.weight_dies
@@ -293,7 +304,7 @@ def decode_throughput(sys: SystemConfig, cfg: ModelConfig,
 
 def is_oom(sys: SystemConfig, cfg: ModelConfig, seq: int) -> bool:
     wb = weight_bytes(cfg, sys.wbits)["total"]
-    kv = kv_bytes_per_token(cfg, sys.abits) * seq
+    kv = kv_bytes_per_token(cfg, sys.kv_bits_eff) * seq
     die_cap = sys.die.capacity
     if sys.kind == "base1":
         return (wb > sys.weight_dies * die_cap) or (kv > sys.dram.usable)
@@ -318,8 +329,8 @@ def decode_token_energy(sys: SystemConfig, cfg: ModelConfig,
     L = cfg.n_layers
     w_read_bits = 8 * (L * (wb["qkv"] + wb["o"] + wb["ffn_active"])
                        + wb["lm_head"])
-    kv_bits = 8 * kv_bytes_layer(cfg, seq, sys.abits) * L
-    kv_write_bits = 8 * kv_bytes_per_token(cfg, sys.abits)
+    kv_bits = 8 * kv_bytes_layer(cfg, seq, sys.kv_bits_eff) * L
+    kv_write_bits = 8 * kv_bytes_per_token(cfg, sys.kv_bits_eff)
     act_bits = 8 * 4 * cfg.d_model * sys.abits / 8 * L
 
     e: Dict[str, float] = {}

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import EngineConfig, ModelConfig
+from repro.core import quant
 from repro.models import rwkv6 as rwkv_mod
 from repro.models import ssm as ssm_mod
 
@@ -74,6 +75,11 @@ class DecodeCache:
     k_pages_w: Optional[jax.Array] = None   # [Lw, B, K, NPw, T, dh]
     v_pages_w: Optional[jax.Array] = None
     page_pos_w: Optional[jax.Array] = None  # [B, NPw] base token position
+    # per-page × per-kv-head dequant scales (kv8/kv4 pools only)
+    k_scale_g: Optional[jax.Array] = None   # [Lg, B, K, NPg] f32
+    v_scale_g: Optional[jax.Array] = None
+    k_scale_w: Optional[jax.Array] = None   # [Lw, B, K, NPw] f32
+    v_scale_w: Optional[jax.Array] = None
     # recurrent state
     rwkv_state: Optional[jax.Array] = None  # [L, B, H, dh, dh]
     rwkv_shift: Optional[jax.Array] = None  # [L, B, D] time-mix token shift
@@ -109,19 +115,33 @@ def cache_spec(cfg: ModelConfig, eng: EngineConfig, batch: int,
     def round_np(np_raw: int, shards: int) -> int:
         return max(ceil_div(np_raw, shards), 1) * shards
 
+    # quantized pools store packed int codes + per-page×head f32 scales
+    fmt = eng.kv_quant
+    if fmt != "none":
+        Ts = quant.kv_page_tokens_stored(T, fmt)
+        pool_dt = quant.kv_storage_dtype(fmt)
+    else:
+        Ts, pool_dt = T, dtype
+
     has_attn = cfg.family != "ssm"
     if has_attn:
         if Lg:
             NPg = eng.max_pages_per_seq or ceil_div(max_context, T)
             NPg = round_np(NPg, page_shards_g)
-            spec["k_pages_g"] = ((Lg, batch, K, NPg, T, dh), dtype)
-            spec["v_pages_g"] = ((Lg, batch, K, NPg, T, dh), dtype)
+            spec["k_pages_g"] = ((Lg, batch, K, NPg, Ts, dh), pool_dt)
+            spec["v_pages_g"] = ((Lg, batch, K, NPg, Ts, dh), pool_dt)
             spec["page_table_g"] = ((batch, NPg), jnp.int32)
+            if fmt != "none":
+                spec["k_scale_g"] = ((Lg, batch, K, NPg), jnp.float32)
+                spec["v_scale_g"] = ((Lg, batch, K, NPg), jnp.float32)
         if Lw:
             NPw = round_np(ceil_div(cfg.window, T) + 1, page_shards_w)
-            spec["k_pages_w"] = ((Lw, batch, K, NPw, T, dh), dtype)
-            spec["v_pages_w"] = ((Lw, batch, K, NPw, T, dh), dtype)
+            spec["k_pages_w"] = ((Lw, batch, K, NPw, Ts, dh), pool_dt)
+            spec["v_pages_w"] = ((Lw, batch, K, NPw, Ts, dh), pool_dt)
             spec["page_pos_w"] = ((batch, NPw), jnp.int32)
+            if fmt != "none":
+                spec["k_scale_w"] = ((Lw, batch, K, NPw), jnp.float32)
+                spec["v_scale_w"] = ((Lw, batch, K, NPw), jnp.float32)
     if cfg.family == "ssm":
         H = cfg.n_heads
         spec["rwkv_state"] = ((cfg.n_layers, batch, H, dh, dh), jnp.float32)
@@ -147,6 +167,10 @@ CACHE_AXES: Dict[str, Tuple] = {
     "k_pages_w": ("layer", "batch", None, "kv_pages", None, None),
     "v_pages_w": ("layer", "batch", None, "kv_pages", None, None),
     "page_pos_w": ("batch", None),
+    "k_scale_g": ("layer", "batch", None, "kv_pages"),
+    "v_scale_g": ("layer", "batch", None, "kv_pages"),
+    "k_scale_w": ("layer", "batch", None, "kv_pages"),
+    "v_scale_w": ("layer", "batch", None, "kv_pages"),
     "rwkv_state": ("layer", "batch", None, None, None),
     "rwkv_shift": ("layer", "batch", "embed"),
     "rwkv_shift2": ("layer", "batch", "embed"),
@@ -315,3 +339,165 @@ def window_page_positions(S: int, NP: int, T: int) -> np.ndarray:
     for sp in range(max(0, n_src - NP), n_src):
         vals[sp % NP] = sp * T
     return vals.astype(np.int32)
+
+
+def window_page_positions_dyn(true_len, NP: int, T: int) -> jax.Array:
+    """`window_page_positions` for a TRACED length (bucketed prefill).
+
+    For ring slot j the newest source page mapping there is
+    ``m - ((m - j) mod NP)`` with m = n_src-1; negative -> never written.
+    """
+    true_len = jnp.asarray(true_len, jnp.int32)
+    n_src = (true_len + T - 1) // T
+    m = n_src - 1
+    j = jnp.arange(NP, dtype=jnp.int32)
+    sp = m - ((m - j) % NP)
+    return jnp.where((sp >= 0) & (n_src > 0), sp * T,
+                     -(10 ** 9)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Quantized page write paths (kv8 / kv4 pools carry per-page scales)
+# ---------------------------------------------------------------------------
+#
+# Token appends re-quantize ONLY the touched page: read the [T, dh] page,
+# dequantize with its current scale, insert the new token, recompute the
+# scale, write the packed page + scale back.  Everything else in the pool
+# is untouched — the append stays O(page), not O(pool).
+#
+# Tokens land in page order, so slots > slot of the touched page are never
+# live — they hold a recycled occupant's stale K/V or bucket padding.
+# Those slots are masked at read time, but they MUST NOT enter the new
+# amax: a 10×-larger stale value would inflate the scale and crush the
+# real tokens' precision.  The appends therefore zero the dead tail
+# before requantizing.
+
+def _zero_dead_slots(page, slot):
+    """page: [..., T, dh]; keep slots 0..slot, zero the rest."""
+    T = page.shape[-2]
+    live = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0) <= \
+        jnp.reshape(slot, (1, 1))
+    return jnp.where(live, page, 0.0)
+
+
+def append_token_quant_uniform(pool, scale, layer, phys, slot, val,
+                               fmt: str):
+    """Lockstep append into a quantized stacked pool.
+
+    pool: [L, B, K, NP, Ts, dh] int codes; scale: [L, B, K, NP] f32;
+    phys/slot: [B] uniform positions; val: [B, K, dh].
+    """
+    L, B, K, NP, Ts, dh = pool.shape
+    zero = jnp.zeros((), jnp.int32)
+    pidx = (layer, zero, zero, phys[0], zero, zero)
+    qpage = jax.lax.dynamic_slice(pool, pidx,
+                                  (1, B, K, 1, Ts, dh))[0, :, :, 0]
+    s = jax.lax.dynamic_slice(scale, (layer, zero, zero, phys[0]),
+                              (1, B, K, 1))[0, :, :, 0]        # [B, K]
+    page = quant.dequantize_kv_page(qpage, s, fmt)             # [B, K, T, dh]
+    page = jax.lax.dynamic_update_slice(
+        page, val[:, :, None, :].astype(page.dtype),
+        (zero, zero, slot[0], zero))
+    page = _zero_dead_slots(page, slot[0])
+    q2, s2 = quant.quantize_kv_page(page, fmt)
+    pool = jax.lax.dynamic_update_slice(pool, q2[:, :, None][None], pidx)
+    scale = jax.lax.dynamic_update_slice(scale, s2[:, :, None][None],
+                                         (layer, zero, zero, phys[0]))
+    return pool, scale
+
+
+def append_token_quant(pool, scale, layer, phys, slot, val, fmt: str):
+    """Ragged (per-sequence position) append into a quantized pool.
+
+    Gathers each sequence's touched page, requantizes it with the new
+    token, scatters page + scale back (continuous-batching path).
+    """
+    L, B, K, NP, Ts, dh = pool.shape
+    b_idx = jnp.arange(B)
+    qpage = pool[layer, b_idx, :, phys]                        # [B, K, Ts, dh]
+    s = scale[layer, b_idx, :, phys]                           # [B, K]
+    page = quant.dequantize_kv_page(qpage, s, fmt)
+    page = page.at[b_idx, :, slot].set(val.astype(page.dtype))
+    T = page.shape[-2]
+    live = jnp.arange(T)[None, :] <= slot[:, None]             # [B, T]
+    page = jnp.where(live[:, None, :, None], page, 0.0)
+    q2, s2 = quant.quantize_kv_page(page, fmt)
+    pool = pool.at[layer, b_idx, :, phys].set(q2, mode="drop")
+    scale = scale.at[layer, b_idx, :, phys].set(s2, mode="drop")
+    return pool, scale
+
+
+def _paged_from_seq(kv_seq, T: int):
+    """[B, S, K, dh] -> page-major [B, K, n_pages, T, dh] (zero-padded)."""
+    B, S, K, dh = kv_seq.shape
+    n_pages = ceil_div(S, T)
+    pad = n_pages * T - S
+    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x.reshape(B, n_pages, T, K, dh).transpose(0, 3, 1, 2, 4)
+
+
+def fill_prefill_at_quant(pool, scale, kv_seq, layer, fmt: str):
+    """Quantizing variant of `fill_prefill_at` (global pool, one layer)."""
+    T = pool.shape[4] * (2 if fmt == "kv4" else 1)
+    x = _paged_from_seq(kv_seq, T)                 # [B, K, n_pages, T, dh]
+    q, s = quant.quantize_kv_page(x, fmt)
+    zero = jnp.zeros((), jnp.int32)
+    pool = jax.lax.dynamic_update_slice(
+        pool, q[None], (layer, zero, zero, zero, zero, zero))
+    scale = jax.lax.dynamic_update_slice(scale, s[None],
+                                         (layer, zero, zero, zero))
+    return pool, scale
+
+
+def fill_window_at_quant(pool, scale, kv_seq, layer, fmt: str):
+    """Quantizing variant of `fill_window_at` (ring pool, one layer)."""
+    NP = pool.shape[3]
+    T = pool.shape[4] * (2 if fmt == "kv4" else 1)
+    x = _paged_from_seq(kv_seq, T)
+    q, s = quant.quantize_kv_page(x, fmt)
+    n_src = x.shape[2]
+    for sp in range(max(0, n_src - NP), n_src):               # static loop
+        pool = pool.at[layer, :, :, sp % NP].set(q[:, :, sp])
+        scale = scale.at[layer, :, :, sp % NP].set(s[:, :, sp])
+    return pool, scale
+
+
+# ---------------------------------------------------------------------------
+# Traced-length window fill (bucketed prefill: prompts padded to a bucket)
+# ---------------------------------------------------------------------------
+
+def fill_window_at_dyn(pool, kv_seq, layer, true_len, *, scale=None,
+                       kv_quant: str = "none"):
+    """Ring-fill ONE layer when only `true_len` of kv_seq's S tokens are
+    real (the rest is bucket padding).  Walks the NEWEST ≤ NP real source
+    pages via traced indices so padding pages never evict live ones.
+    """
+    B, S, K, dh = kv_seq.shape
+    NP, Ts = pool.shape[3], pool.shape[4]
+    T = Ts * (2 if kv_quant == "kv4" else 1)
+    x = _paged_from_seq(kv_seq, T)                 # [B, K, n_pad, T, dh]
+    n_pad = x.shape[2]
+    if kv_quant != "none":
+        x, s_all = quant.quantize_kv_page(x, kv_quant)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    n_src = (true_len + T - 1) // T
+    zero = jnp.zeros((), jnp.int32)
+    for r in range(min(NP, n_pad)):                # static trip count
+        sp = n_src - 1 - r                         # traced source page
+        ok = sp >= 0
+        spc = jnp.clip(sp, 0, n_pad - 1)
+        page = jax.lax.dynamic_slice_in_dim(x, spc, 1, axis=2)  # [B,K,1,*]
+        phys = spc % NP
+        pidx = (layer, zero, zero, phys, zero, zero)
+        cur = jax.lax.dynamic_slice(pool, pidx, (1, B, K, 1, Ts, dh))
+        upd = jnp.where(ok, page[None].astype(pool.dtype), cur)
+        pool = jax.lax.dynamic_update_slice(pool, upd, pidx)
+        if kv_quant != "none":
+            sidx = (layer, zero, zero, phys)
+            s_pg = jax.lax.dynamic_slice_in_dim(s_all, spc, 1, axis=2)
+            cur_s = jax.lax.dynamic_slice(scale, sidx, (1, B, K, 1))
+            scale = jax.lax.dynamic_update_slice(
+                scale, jnp.where(ok, s_pg[None], cur_s), sidx)
+    if kv_quant != "none":
+        return pool, scale
+    return pool

@@ -90,6 +90,91 @@ def quantize_activations_int8(x: jax.Array):
 
 
 # ---------------------------------------------------------------------------
+# KV-cache page quantization (paper: the KV analogue of the weight DSE axis)
+# ---------------------------------------------------------------------------
+#
+# KV pages quantize symmetrically at page × kv-head granularity: one fp32
+# scale per [T, dh] page so the paged-attention kernel folds dequantization
+# into its online-softmax inner loop (scale per score column) while the
+# page pool itself stores 2×/4× fewer bytes.  kv4 packs two tokens per byte
+# along the token dim, mirroring `quant_gemv`'s input-dim nibble packing.
+
+KV_QUANT_FORMATS = ("none", "kv8", "kv4")
+
+
+def kv_quant_bits(fmt: str) -> int:
+    """Stored bits per KV element (none -> 16, the bf16 default)."""
+    return {"none": 16, "kv8": 8, "kv4": 4}[fmt]
+
+
+def kv_storage_dtype(fmt: str):
+    return {"kv8": jnp.int8, "kv4": jnp.uint8}[fmt]
+
+
+def kv_page_tokens_stored(page_tokens: int, fmt: str) -> int:
+    """Length of the (possibly packed) token dim in storage."""
+    if fmt == "kv4":
+        if page_tokens % 2:
+            raise ValueError(f"kv4 needs even page_tokens, got {page_tokens}")
+        return page_tokens // 2
+    return page_tokens
+
+
+def pack_int4_tokens(q: jax.Array) -> jax.Array:
+    """[..., T, dh] offset-binary int (0..15) -> [..., T/2, dh] uint8.
+
+    Token 2i lands in the high nibble, token 2i+1 in the low nibble
+    (the `quant_gemv` packing order, applied to the token dim).
+    """
+    hi = q[..., 0::2, :].astype(jnp.uint8)
+    lo = q[..., 1::2, :].astype(jnp.uint8)
+    return ((hi << 4) | lo).astype(jnp.uint8)
+
+
+def unpack_int4_tokens(q: jax.Array) -> jax.Array:
+    """[..., T/2, dh] uint8 -> [..., T, dh] int8 centered at 0 (-8 offset)."""
+    hi = ((q >> 4) & 0xF).astype(jnp.int8) - 8
+    lo = (q & 0xF).astype(jnp.int8) - 8
+    T2 = q.shape[-2]
+    out = jnp.stack([hi, lo], axis=-2)                  # [..., T/2, 2, dh]
+    return out.reshape(q.shape[:-2] + (2 * T2,) + q.shape[-1:])
+
+
+def quantize_kv_page(x: jax.Array, fmt: str):
+    """x: [..., T, dh] float -> (q [..., T(/2), dh] int, scale [...] f32).
+
+    Per-(leading dims) symmetric scale over the whole [T, dh] page — the
+    issue's page × kv-head granularity when called on [B, K, NP, T, dh].
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    if fmt == "kv8":
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(xf / scale[..., None, None]),
+                     -127, 127).astype(jnp.int8)
+    elif fmt == "kv4":
+        scale = jnp.maximum(amax, 1e-8) / 7.0
+        q = jnp.clip(jnp.round(xf / scale[..., None, None]),
+                     -7, 7).astype(jnp.int8) + 8
+        q = pack_int4_tokens(q)
+    else:
+        raise ValueError(fmt)
+    return q, scale
+
+
+def dequantize_kv_page(q: jax.Array, scale: jax.Array, fmt: str,
+                       dtype=jnp.float32) -> jax.Array:
+    """Inverse of `quantize_kv_page`; scale broadcasts over [T, dh]."""
+    if fmt == "kv8":
+        w = q.astype(jnp.float32)
+    elif fmt == "kv4":
+        w = unpack_int4_tokens(q).astype(jnp.float32)
+    else:
+        raise ValueError(fmt)
+    return (w * scale[..., None, None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # tree-level quantization
 # ---------------------------------------------------------------------------
 

@@ -24,9 +24,34 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+try:  # jax >= 0.5 re-exports shard_map at top level
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+import inspect as _inspect
+
+if "check_vma" in _inspect.signature(_shard_map_impl).parameters:
+    shard_map = _shard_map_impl
+else:  # jax 0.4.x: replication check is `check_rep`, manual axes via `auto`
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  axis_names=None, **kw):
+        if axis_names is not None:
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=check_vma,
+                               **kw)
 
 from repro.kernels.flash_attention.ref import NEG_INF
+
+
+def _axis_size(name):
+    """jax.lax.axis_size where available; psum(1, axis) on jax 0.4.x
+    (constant-folds to the same static int inside shard_map)."""
+    try:
+        return jax.lax.axis_size(name)
+    except AttributeError:
+        return jax.lax.psum(1, name)
 
 
 # ---------------------------------------------------------------------------
@@ -103,7 +128,7 @@ def ring_attention_local(q, k, v, *, axis_name: str, causal: bool,
     [i·Sl, (i+1)·Sl).  n_dev-1 ppermutes stream every KV chunk past every
     q chunk; online softmax merges partials.
     """
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     B, Sl, H, dh = q.shape
     q_pos = idx * Sl + jnp.arange(Sl)
@@ -157,7 +182,7 @@ def _shard_page_offset(page_axes: Sequence[str], np_local: int):
     """Linearized first-local-page index of this shard."""
     idx = 0
     for a in page_axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx * np_local
 
 
@@ -184,12 +209,23 @@ def local_append_uniform(pool_local, phys, slot, val, page_axes):
 def sharded_append_uniform(pool_k, pool_v, layer, k_new, v_new, phys, slot,
                            mesh: Mesh, *,
                            batch_axes: Sequence[str] = ("data",),
-                           page_axes: Sequence[str] = ("model",)):
+                           page_axes: Sequence[str] = ("model",),
+                           k_scale=None, v_scale=None,
+                           kv_quant: str = "none"):
     """In-place append of one token's K/V into FULL stacked pools
     [L, B, K, NP, T, dh] at a traced layer index, inside the owning shard
-    (the paper's direct G2-die write).  Uniform lockstep positions."""
+    (the paper's direct G2-die write).  Uniform lockstep positions.
+
+    Quantized pools (kv8/kv4) carry per-page×head scales [L, B, K, NP]:
+    the owning shard dequantizes ONLY the touched page, inserts the token,
+    requantizes, and writes page + scale back — still O(page) per layer.
+    Returns (k, v) or (k, v, k_scale, v_scale) when quantized.
+    """
+    from repro.core import quant
+
     bspec = _axes_spec(batch_axes)
     pspec = P(None, bspec, None, _axes_spec(page_axes), None, None)
+    sspec = P(None, bspec, None, _axes_spec(page_axes))
     nspec = P(bspec, None, None)
     lspec = P(bspec)
 
@@ -210,6 +246,44 @@ def sharded_append_uniform(pool_k, pool_v, layer, k_new, v_new, phys, slot,
 
         return put(kp, kn), put(vp, vn)
 
+    def local_quant(kp, vp, ks, vs, kn, vn, ph, sl, layer):
+        L, B, K, NPl, Ts, dh = kp.shape
+        p_loc = ph[0] - _shard_page_offset(page_axes, NPl)
+        owned = (p_loc >= 0) & (p_loc < NPl)
+        p_c = jnp.clip(p_loc, 0, NPl - 1)
+        zero = jnp.zeros((), jnp.int32)
+        pidx = (layer, zero, zero, p_c, zero, zero)
+        sidx = (layer, zero, zero, p_c)
+
+        def put(pool, scl, val):
+            from repro.core.paged_kv import _zero_dead_slots
+            cur_q = jax.lax.dynamic_slice(pool, pidx, (1, B, K, 1, Ts, dh))
+            cur_s = jax.lax.dynamic_slice(scl, sidx, (1, B, K, 1))
+            page = quant.dequantize_kv_page(cur_q[0, :, :, 0],
+                                            cur_s[0, :, :, 0], kv_quant)
+            page = jax.lax.dynamic_update_slice(
+                page, val[:, :, None, :].astype(page.dtype),
+                (zero, zero, sl[0], zero))
+            page = _zero_dead_slots(page, sl[0])
+            q2, s2 = quant.quantize_kv_page(page, kv_quant)
+            q2 = jnp.where(owned, q2[:, :, None][None], cur_q)
+            s2 = jnp.where(owned, s2[:, :, None][None], cur_s)
+            return (jax.lax.dynamic_update_slice(pool, q2, pidx),
+                    jax.lax.dynamic_update_slice(scl, s2, sidx))
+
+        kp, ks = put(kp, ks, kn)
+        vp, vs = put(vp, vs, vn)
+        return kp, vp, ks, vs
+
+    if kv_quant != "none":
+        return shard_map(local_quant, mesh=mesh,
+                         in_specs=(pspec, pspec, sspec, sspec, nspec, nspec,
+                                   lspec, lspec, P()),
+                         out_specs=(pspec, pspec, sspec, sspec),
+                         check_vma=False)(
+            pool_k, pool_v, k_scale, v_scale, k_new, v_new, phys, slot,
+            jnp.asarray(layer, jnp.int32))
+
     return shard_map(local, mesh=mesh,
                      in_specs=(pspec, pspec, nspec, nspec, lspec, lspec,
                                P()),
@@ -220,21 +294,29 @@ def sharded_append_uniform(pool_k, pool_v, layer, k_new, v_new, phys, slot,
 
 def sharded_prefill_fill(pool, kv_seq, layer, mesh: Mesh, *,
                          batch_axes: Sequence[str] = ("data",),
-                         page_axes: Sequence[str] = ("model",)):
+                         page_axes: Sequence[str] = ("model",),
+                         scale=None, kv_quant: str = "none"):
     """Write prefill K/V [B, S, K, dh] into ONE layer of the stacked global
     pool [L, B, K, NP, T, dh], each shard packing ONLY its own page range.
 
     kv is replicated over the page axes already (prefill activations are
     batch-sharded), so the per-shard slice is local — a pjit-level fill
     all-gathers the ENTIRE pool per layer (measured 148 GiB × layers).
+
+    Quantized pools (kv8/kv4): each shard quantizes its own page range and
+    writes codes + per-page scales; returns (pool, scale).
     """
-    L, Bt, K, NP, T, dh = pool.shape
+    from repro.core import quant
+
+    L, Bt, K, NP, Ts, dh = pool.shape
+    T = Ts * (2 if kv_quant == "kv4" else 1)
     B, S, _, _ = kv_seq.shape
     pad = NP * T - S
     kv = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else \
         kv_seq
     bspec = _axes_spec(batch_axes)
     pspec = P(None, bspec, None, _axes_spec(page_axes), None, None)
+    sspec = P(None, bspec, None, _axes_spec(page_axes))
     kvspec = P(bspec, None, None, None)
 
     def local(pool_l, kvv, lyr):
@@ -248,6 +330,26 @@ def sharded_prefill_fill(pool, kv_seq, layer, mesh: Mesh, *,
             pool_l, pages[None].astype(pool_l.dtype),
             (lyr, zero, zero, zero, zero, zero))
 
+    def local_quant(pool_l, scale_l, kvv, lyr):
+        _, Bl, _, NPl, _, _ = pool_l.shape
+        off = _shard_page_offset(page_axes, NPl)
+        zero = jnp.zeros((), jnp.int32)
+        chunk = jax.lax.dynamic_slice(
+            kvv, (zero, off * T, zero, zero), (Bl, NPl * T, K, dh))
+        pages = chunk.reshape(Bl, NPl, T, K, dh).transpose(0, 3, 1, 2, 4)
+        q, s = quant.quantize_kv_page(pages, kv_quant)
+        pool_l = jax.lax.dynamic_update_slice(
+            pool_l, q[None], (lyr, zero, zero, zero, zero, zero))
+        scale_l = jax.lax.dynamic_update_slice(
+            scale_l, s[None], (lyr, zero, zero, zero))
+        return pool_l, scale_l
+
+    if kv_quant != "none":
+        return shard_map(local_quant, mesh=mesh,
+                         in_specs=(pspec, sspec, kvspec, P()),
+                         out_specs=(pspec, sspec), check_vma=False)(
+            pool, scale, kv, jnp.asarray(layer, jnp.int32))
+
     return shard_map(local, mesh=mesh, in_specs=(pspec, kvspec, P()),
                      out_specs=pspec, check_vma=False)(
         pool, kv, jnp.asarray(layer, jnp.int32))
@@ -255,36 +357,62 @@ def sharded_prefill_fill(pool, kv_seq, layer, mesh: Mesh, *,
 
 def sharded_window_fill(pool, kv_seq, layer, mesh: Mesh, *,
                         batch_axes: Sequence[str] = ("data",),
-                        page_axes: Sequence[str] = ("model",)):
-    """Ring-fill the newest window pages of ONE layer, shard-locally."""
-    L, Bt, K, NP, T, dh = pool.shape
-    B, S, _, _ = kv_seq.shape
+                        page_axes: Sequence[str] = ("model",),
+                        scale=None, kv_quant: str = "none"):
+    """Ring-fill the newest window pages of ONE layer, shard-locally.
+
+    Quantized pools: shard-local page quantization; returns (pool, scale).
+    """
     from repro.core import paged_kv as pk
+    from repro.core import quant
+
+    L, Bt, K, NP, Ts, dh = pool.shape
+    T = Ts * (2 if kv_quant == "kv4" else 1)
+    B, S, _, _ = kv_seq.shape
     n_src = pk.ceil_div(S, T)
     pad = n_src * T - S
     kv = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else \
         kv_seq
     bspec = _axes_spec(batch_axes)
     pspec = P(None, bspec, None, _axes_spec(page_axes), None, None)
+    sspec = P(None, bspec, None, _axes_spec(page_axes))
     kvspec = P(bspec, None, None, None)
 
-    def local(pool_l, kvv, lyr):
+    def local(pool_l, kvv, lyr, scale_l=None):
         _, Bl, _, NPl, _, _ = pool_l.shape
         off = _shard_page_offset(page_axes, NPl)
         zero = jnp.zeros((), jnp.int32)
         x = kvv.reshape(Bl, n_src, T, K, dh).transpose(0, 3, 1, 2, 4)
+        if kv_quant != "none":
+            x, s_all = quant.quantize_kv_page(x, kv_quant)
         for sp in range(max(0, n_src - NP), n_src):   # static, ≤ NP pages
             slot = sp % NP
             loc = slot - off
             owned = (loc >= 0) & (loc < NPl)
             loc_c = jnp.clip(loc, 0, NPl - 1)
             idx = (lyr, zero, zero, loc_c, zero, zero)
-            cur = jax.lax.dynamic_slice(pool_l, idx, (1, Bl, K, 1, T, dh))
+            cur = jax.lax.dynamic_slice(pool_l, idx, (1, Bl, K, 1, Ts, dh))
             upd = jnp.where(owned,
                             x[:, :, sp][None, :, :, None].astype(
                                 pool_l.dtype), cur)
             pool_l = jax.lax.dynamic_update_slice(pool_l, upd, idx)
+            if kv_quant != "none":
+                sidx = (lyr, zero, zero, loc_c)
+                cur_s = jax.lax.dynamic_slice(scale_l, sidx, (1, Bl, K, 1))
+                upd_s = jnp.where(owned, s_all[:, :, sp][None, :, :, None],
+                                  cur_s)
+                scale_l = jax.lax.dynamic_update_slice(scale_l, upd_s, sidx)
+        if kv_quant != "none":
+            return pool_l, scale_l
         return pool_l
+
+    if kv_quant != "none":
+        def local_q(pool_l, scale_l, kvv, lyr):
+            return local(pool_l, kvv, lyr, scale_l)
+        return shard_map(local_q, mesh=mesh,
+                         in_specs=(pspec, sspec, kvspec, P()),
+                         out_specs=(pspec, sspec), check_vma=False)(
+            pool, scale, kv, jnp.asarray(layer, jnp.int32))
 
     return shard_map(local, mesh=mesh, in_specs=(pspec, kvspec, P()),
                      out_specs=pspec, check_vma=False)(
@@ -298,6 +426,8 @@ def paged_decode_attention_sharded(
     page_axes: Sequence[str] = ("model",),
     impl: str = "auto",
     append: Optional[Tuple] = None,   # (k_new [B,K,dh], v_new, phys, slot)
+    kv_quant: str = "none",
+    k_scale=None, v_scale=None,       # [B, K, NP] per-page×head scales
 ):
     """q: [B, H, dh]; pages: [B, K, NP, T, dh]; page_base: [B, NP] absolute
     position of each physical page's slot 0 (<0 = unwritten);
@@ -314,6 +444,11 @@ def paged_decode_attention_sharded(
     """
     from repro.kernels.paged_attention.ops import paged_attention_partial
 
+    if append is not None and kv_quant != "none":
+        raise NotImplementedError(
+            "fused append+attention does not support quantized pools; "
+            "the engine appends via sharded_append_uniform instead")
+
     n_page_shards = 1
     for a in page_axes:
         n_page_shards *= mesh.shape[a]
@@ -321,17 +456,26 @@ def paged_decode_attention_sharded(
     bspec = _axes_spec(batch_axes)
     qspec = P(bspec, None, None)
     pspec = P(bspec, None, _axes_spec(page_axes), None, None)
+    sspec = P(bspec, None, _axes_spec(page_axes))
     basespec = P(bspec, _axes_spec(page_axes))
     lenspec = P(bspec)
     nspec = P(bspec, None, None)
 
-    def run(qq, kp, vp, base, ln):
+    def run(qq, kp, vp, base, ln, ks=None, vs=None):
         o, m, l = paged_attention_partial(qq, kp, vp, base, ln,
                                           window=window, is_global=is_global,
-                                          impl=impl)
+                                          impl=impl, kv_quant=kv_quant,
+                                          k_scale=ks, v_scale=vs)
         if n_page_shards > 1:
             o = combine_partials(o, m, l, tuple(page_axes))
         return o.astype(qq.dtype)
+
+    if append is None and kv_quant != "none":
+        return shard_map(run, mesh=mesh,
+                         in_specs=(qspec, pspec, pspec, basespec, lenspec,
+                                   sspec, sspec),
+                         out_specs=qspec, check_vma=False)(
+            q, k_pages, v_pages, page_base, length, k_scale, v_scale)
 
     if append is None:
         return shard_map(run, mesh=mesh,

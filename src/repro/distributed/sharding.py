@@ -14,6 +14,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Rules = Mapping[str, Union[str, Tuple[str, ...], None]]
 
+
+def make_mesh_compat(shape: Sequence[int], axes: Sequence[str],
+                     devices=None) -> Mesh:
+    """`jax.make_mesh` with Auto axis types where the jax version has them
+    (>= 0.5); plain mesh otherwise (0.4.x has no axis_types kwarg)."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axes), devices=devices)
+
 # ---------------------------------------------------------------------------
 # Rule sets
 # ---------------------------------------------------------------------------

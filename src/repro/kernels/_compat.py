@@ -1,0 +1,10 @@
+"""Pallas API compatibility across jax versions.
+
+jax 0.4.x names the TPU compiler-params struct ``TPUCompilerParams``;
+newer releases renamed it ``CompilerParams``.  Kernels import the alias
+from here so they run on whichever jax the container ships.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -24,15 +24,36 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 NEG_INF = -1e30
 
 
+def _load_pages(ref, ppb: int, T: int, dh: int, kv_quant: str):
+    """VMEM page block -> [ppb*T, dh] f32 raw codes (unscaled for quant).
+
+    kv4 stores two tokens per byte along the token dim (high nibble first,
+    the `quant_gemv` packing order); the unpack happens in-register after
+    the 2-4× smaller block has streamed HBM→VMEM — that is the whole win.
+    """
+    if kv_quant == "kv4":
+        qp = ref[0, 0]                                       # [ppb, T/2, dh]
+        hi = ((qp >> 4) & 0xF).astype(jnp.int8) - 8
+        lo = (qp & 0xF).astype(jnp.int8) - 8
+        x = jnp.stack([hi, lo], axis=2)                      # [ppb, T/2, 2, dh]
+        return x.reshape(ppb * T, dh).astype(jnp.float32)
+    return ref[0, 0].reshape(ppb * T, dh).astype(jnp.float32)
+
+
 def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
-            q_ref, k_ref, v_ref,                     # VMEM blocks
-            o_ref, m_ref, l_ref,                     # outputs
-            m_scr, l_scr, acc_scr,                   # VMEM scratch
-            *, T: int, ppb: int, n_blocks: int, window: Optional[int],
-            scale: float):
+            q_ref, k_ref, v_ref, *refs,              # VMEM blocks (+scales)
+            T: int, ppb: int, n_blocks: int, window: Optional[int],
+            scale: float, kv_quant: str):
+    if kv_quant == "none":
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
     ib = pl.program_id(2)
 
@@ -44,12 +65,20 @@ def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
 
     G, dh = q_ref.shape[2], q_ref.shape[3]
     q = q_ref[0, 0].astype(jnp.float32) * scale              # [G, dh]
-    k = k_ref[0, 0].reshape(ppb * T, dh).astype(jnp.float32)
-    v = v_ref[0, 0].reshape(ppb * T, dh).astype(jnp.float32)
+    k = _load_pages(k_ref, ppb, T, dh, kv_quant)
+    v = _load_pages(v_ref, ppb, T, dh, kv_quant)
+
+    # per-page × per-head dequant scales, broadcast to score columns: the
+    # K scale folds into s AFTER the MXU dot, the V scale folds into p
+    # BEFORE the attend dot — no dequantized page copy ever materializes.
+    if kv_quant != "none":
+        k_cols = jnp.broadcast_to(ks_ref[0, 0][:, None],
+                                  (ppb, T)).reshape(ppb * T)
+        v_cols = jnp.broadcast_to(vs_ref[0, 0][:, None],
+                                  (ppb, T)).reshape(ppb * T)
 
     # data-derived validity from prefetched page bases
     length = len_ref[b]
-    page_ids = ib * ppb + jax.lax.broadcasted_iota(jnp.int32, (ppb, T), 0)
     slots = jax.lax.broadcasted_iota(jnp.int32, (ppb, T), 1)
     bases = base_ref[b, pl.dslice(ib * ppb, ppb)]            # [ppb]
     pos = bases[:, None] + slots                             # [ppb, T]
@@ -60,6 +89,8 @@ def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # [G, ppb*T]
+    if kv_quant != "none":
+        s = s * k_cols[None, :]
     s = jnp.where(valid[None, :], s, NEG_INF)
 
     m_prev = m_scr[...]                                      # [G, 1]
@@ -68,8 +99,9 @@ def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
     p = jnp.where(valid[None, :], p, 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    pv = p * v_cols[None, :] if kv_quant != "none" else p
     acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_scr[...] = m_new
 
     @pl.when(ib == n_blocks - 1)
@@ -82,7 +114,7 @@ def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
 
 def paged_attention_pallas(
     q: jax.Array,          # [B, K, G, dh]
-    k_pages: jax.Array,    # [B, K, NP, T, dh]
+    k_pages: jax.Array,    # [B, K, NP, T, dh] (kv4: [B, K, NP, T/2, dh])
     v_pages: jax.Array,
     page_base: jax.Array,  # [B, NP] int32
     length: jax.Array,     # [B] int32
@@ -90,24 +122,36 @@ def paged_attention_pallas(
     window: Optional[int] = None,
     pages_per_block: int = 8,
     interpret: bool = False,
+    kv_quant: str = "none",
+    k_scale: Optional[jax.Array] = None,   # [B, K, NP] f32 per-page scales
+    v_scale: Optional[jax.Array] = None,
 ):
-    B, K, NP, T, dh = k_pages.shape
+    B, K, NP, Ts, dh = k_pages.shape
+    T = 2 * Ts if kv_quant == "kv4" else Ts
     G = q.shape[2]
     ppb = min(pages_per_block, NP)
     assert NP % ppb == 0, (NP, ppb)
     n_blocks = NP // ppb
     scale = dh ** -0.5
 
+    in_specs = [
+        pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
+        pl.BlockSpec((1, 1, ppb, Ts, dh),
+                     lambda b, k, ib, *_: (b, k, ib, 0, 0)),
+        pl.BlockSpec((1, 1, ppb, Ts, dh),
+                     lambda b, k, ib, *_: (b, k, ib, 0, 0)),
+    ]
+    inputs = [q, k_pages, v_pages]
+    if kv_quant != "none":
+        assert k_scale is not None and v_scale is not None, kv_quant
+        sspec = pl.BlockSpec((1, 1, ppb), lambda b, k, ib, *_: (b, k, ib))
+        in_specs += [sspec, sspec]
+        inputs += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, K, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, ppb, T, dh),
-                         lambda b, k, ib, *_: (b, k, ib, 0, 0)),
-            pl.BlockSpec((1, 1, ppb, T, dh),
-                         lambda b, k, ib, *_: (b, k, ib, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
             pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
@@ -120,7 +164,7 @@ def paged_attention_pallas(
         ],
     )
     kernel = functools.partial(_kernel, T=T, ppb=ppb, n_blocks=n_blocks,
-                               window=window, scale=scale)
+                               window=window, scale=scale, kv_quant=kv_quant)
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -130,7 +174,7 @@ def paged_attention_pallas(
             jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(page_base, length, q, k_pages, v_pages)
+    )(page_base, length, *inputs)
     return o, m[..., 0], l[..., 0]

@@ -17,7 +17,7 @@ def default_impl() -> str:
 
 def paged_attention_partial(
     q: jax.Array,          # [B, H, dh]
-    k_pages: jax.Array,    # [B, K, NP, T, dh]
+    k_pages: jax.Array,    # [B, K, NP, T, dh] (kv4: packed [B, K, NP, T/2, dh])
     v_pages: jax.Array,
     page_base: jax.Array,  # [B, NP]
     length: jax.Array,     # [B]
@@ -26,6 +26,9 @@ def paged_attention_partial(
     is_global=None,
     impl: str = "auto",
     pages_per_block: int = 8,
+    kv_quant: str = "none",
+    k_scale: Optional[jax.Array] = None,   # [B, K, NP] per-page×head scales
+    v_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (ō [B,H,dh] locally normalized, m [B,H], ℓ [B,H])."""
     if impl == "auto":
@@ -34,7 +37,8 @@ def paged_attention_partial(
         # dynamic local/global flags (scanned layers) take the jnp path
         return paged_attention_partial_ref(
             q, k_pages, v_pages, page_base, length,
-            window=window, is_global=is_global)
+            window=window, is_global=is_global, kv_quant=kv_quant,
+            k_scale=k_scale, v_scale=v_scale)
 
     B, H, dh = q.shape
     K = k_pages.shape[1]
@@ -47,6 +51,7 @@ def paged_attention_partial(
         q.reshape(B, K, G, dh), k_pages, v_pages,
         page_base.astype(jnp.int32), length.astype(jnp.int32),
         window=window, pages_per_block=max(ppb, 1),
-        interpret=(impl == "interpret"))
+        interpret=(impl == "interpret"),
+        kv_quant=kv_quant, k_scale=k_scale, v_scale=v_scale)
     return (o.reshape(B, H, dh).astype(q.dtype),
             m.reshape(B, H), l.reshape(B, H))

@@ -28,8 +28,13 @@ def paged_attention_partial_ref(
     *,
     window: Optional[int] = None,
     is_global=None,        # traced bool: overrides window (gemma3 scan)
+    kv_quant: str = "none",
+    k_scale: Optional[jax.Array] = None,   # [B, K, NP] per-page×head scales
+    v_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    B, K, NP, T, dh = k_pages.shape
+    B, K, NP = k_pages.shape[:3]
+    dh = k_pages.shape[-1]
+    T = 2 * k_pages.shape[3] if kv_quant == "kv4" else k_pages.shape[3]
     H = q.shape[1]
     G = H // K
     scale = dh ** -0.5
@@ -37,7 +42,19 @@ def paged_attention_partial_ref(
     # compute in the POOL dtype with f32 accumulation: casting the pool to
     # f32 would materialize a 2× copy of the entire local KV every layer
     # (measured: dominant HLO bytes) — exactly what a TPU kernel avoids by
-    # feeding bf16 into the MXU with an f32 accumulator.
+    # feeding bf16 into the MXU with an f32 accumulator.  Quantized pools
+    # contract their int codes in f32 and fold the per-page scale into the
+    # score / probability matrices (mirroring the Pallas kernel's math).
+    # NB: the f32 cast of the codes below DOES materialize a dequant-width
+    # copy — this path is the correctness oracle; the bandwidth win is the
+    # Pallas kernel's, which streams the packed codes into VMEM.
+    if kv_quant != "none":
+        from repro.core.quant import unpack_int4_tokens
+        if kv_quant == "kv4":
+            k_pages = unpack_int4_tokens(k_pages)
+            v_pages = unpack_int4_tokens(v_pages)
+        k_pages = k_pages.astype(jnp.float32)
+        v_pages = v_pages.astype(jnp.float32)
     dt = k_pages.dtype
     qg = (q.astype(jnp.float32) * scale).astype(dt).reshape(B, K, G, dh)
 
@@ -51,12 +68,15 @@ def paged_attention_partial_ref(
 
     s = jnp.einsum("bkgd,bkntd->bkgnt", qg, k_pages,
                    preferred_element_type=jnp.float32)           # [B,K,G,NP,T]
+    if kv_quant != "none":
+        s = s * k_scale[:, :, None, :, None]
     s = jnp.where(valid[:, None, None], s, NEG_INF)
     m = jnp.max(s, axis=(-2, -1))                                # [B, K, G]
     p = jnp.exp(s - m[..., None, None])
     p = jnp.where(valid[:, None, None], p, 0.0)
     l = jnp.sum(p, axis=(-2, -1))                                # [B, K, G]
-    o = jnp.einsum("bkgnt,bkntd->bkgd", p.astype(dt), v_pages,
+    pv = p * v_scale[:, :, None, :, None] if kv_quant != "none" else p
+    o = jnp.einsum("bkgnt,bkntd->bkgd", pv.astype(dt), v_pages,
                    preferred_element_type=jnp.float32)
     o = o / jnp.maximum(l, 1e-30)[..., None]
 

@@ -116,7 +116,9 @@ def _split_operands(args: str) -> List[str]:
             cur.append(ch)
     if cur:
         out.append("".join(cur).strip())
-    return [o.lstrip("%") for o in out if o.strip()]
+    # older HLO printers emit typed operands ("f32[4,128]{1,0} %name"),
+    # newer ones bare "%name" — keep just the symbol
+    return [o.split()[-1].lstrip("%") for o in out if o.strip()]
 
 
 def parse_module(text: str) -> Dict[str, Computation]:

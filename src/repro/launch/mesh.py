@@ -8,14 +8,15 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def mesh_from_devices(devices=None, model_parallel: int = 0) -> Mesh:
@@ -36,8 +37,12 @@ def mesh_from_devices(devices=None, model_parallel: int = 0) -> Mesh:
     assert n % model_parallel == 0, (n, model_parallel)
     import numpy as np
     arr = np.asarray(devices).reshape(n // model_parallel, model_parallel)
-    return Mesh(arr, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    try:
+        from jax.sharding import AxisType
+        return Mesh(arr, ("data", "model"),
+                    axis_types=(AxisType.Auto, AxisType.Auto))
+    except (ImportError, TypeError):
+        return Mesh(arr, ("data", "model"))
 
 
 def mesh_axis_size(mesh: Optional[Mesh], name: str) -> int:

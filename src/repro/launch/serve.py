@@ -37,7 +37,8 @@ def serve(argv=None):
         eng = recommend_engine_config(args.arch, args.max_context)
         eng = EngineConfig(**{**eng.__dict__, "page_tokens": 16,
                               "uniform_lengths": False, "quant": "none"})
-        print(f"[serve] DSE picked variant={eng.variant}")
+        print(f"[serve] DSE picked variant={eng.variant} "
+              f"kv_quant={eng.kv_quant}")
     else:
         eng = EngineConfig(page_tokens=16, uniform_lengths=False)
     if args.reduced:

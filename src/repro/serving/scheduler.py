@@ -5,6 +5,13 @@ Host-side request management around the jit'd decode step:
     the queue between steps (per-slot prefill into the paged pools);
   * per-slot lengths are ragged → the engine's general (scatter) append
     path (`uniform_lengths=False`);
+  * admits splice the one-sequence prefill cache into its slot with a
+    single jit'd `dynamic_update_slice` per leaf (donated cache, so XLA
+    aliases the pools in place) — the eager `.at[:, i].set` path copied
+    the ENTIRE pool per admit;
+  * prompts are padded to power-of-two buckets before prefill so the
+    jit'd prefill compiles once per bucket, not once per distinct prompt
+    length (the engine masks padding via its `prompt_len` argument);
   * slot eviction = clearing host bookkeeping — its pages are simply
     overwritten by the next occupant (per-sequence page stripes, the
     access-aware reuse story of §IV-D).
@@ -24,6 +31,8 @@ from repro.core.engine import KVNANDEngine
 from repro.models.transformer import Runtime
 from repro.serving.sampler import sample
 
+MIN_PROMPT_BUCKET = 16
+
 
 @dataclasses.dataclass
 class Request:
@@ -34,11 +43,19 @@ class Request:
     done: bool = False
 
 
+def bucket_length(n: int, lo: int = MIN_PROMPT_BUCKET) -> int:
+    """Smallest power-of-two bucket (≥ lo) holding n tokens."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_context: int = 512, eng: Optional[EngineConfig] = None,
                  rt: Optional[Runtime] = None, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, bucket_prompts: bool = True):
         eng = eng or EngineConfig(page_tokens=16, uniform_lengths=False)
         self.cfg = cfg
         self.engine = KVNANDEngine(cfg, eng, rt or Runtime())
@@ -46,6 +63,9 @@ class ContinuousBatcher:
         self.B = batch_slots
         self.max_context = max_context
         self.temperature = temperature
+        # recurrent prefill folds padding into carried state → exact-length
+        self.bucket_prompts = (bucket_prompts
+                               and cfg.family not in ("ssm", "hybrid"))
         self.rng = jax.random.PRNGKey(seed)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * batch_slots
@@ -54,8 +74,11 @@ class ContinuousBatcher:
         self._decode = jax.jit(
             lambda p, c, t: self.engine.decode_step(p, c, t))
         self._prefill1 = jax.jit(
-            lambda p, b: self.engine.prefill(p, b, max_context),
-            static_argnames=())
+            lambda p, b: self.engine.prefill(p, b, max_context))
+        self._prefill1_bucketed = jax.jit(
+            lambda p, b, n: self.engine.prefill(p, b, max_context,
+                                                prompt_len=n))
+        self._splice = jax.jit(_splice_slot, donate_argnums=(0,))
         self.completed: Dict[int, Request] = {}
 
     # -- host-side slot management ------------------------------------
@@ -71,10 +94,18 @@ class ContinuousBatcher:
 
     def _prefill_slot(self, i: int, req: Request):
         """Prefill one sequence and splice its pools/length into slot i."""
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, c1 = self._prefill1(self.params, {"tokens": toks})
-        self.cache = _splice_slot(self.cache, c1, i)
-        self._lengths[i] = len(req.prompt)
+        n = len(req.prompt)
+        if self.bucket_prompts:
+            Sb = min(bucket_length(n), max(self.max_context - 1, n))
+            toks = jnp.asarray(req.prompt + [0] * (Sb - n), jnp.int32)[None]
+            logits, c1 = self._prefill1_bucketed(
+                self.params, {"tokens": toks}, jnp.asarray(n, jnp.int32))
+        else:
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, c1 = self._prefill1(self.params, {"tokens": toks})
+        self.cache = self._splice(self.cache, c1,
+                                  jnp.asarray(i, jnp.int32))
+        self._lengths[i] = n
         self.rng, k = jax.random.split(self.rng)
         tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
                          temperature=self.temperature)[0])
@@ -114,18 +145,40 @@ class ContinuousBatcher:
         return self.completed
 
 
-def _splice_slot(cache, one, i: int):
-    """Copy sequence 0 of a B=1 cache into slot i of the batch cache."""
-    import dataclasses as dc
+_BATCH_AXIS0 = ("page_table_g", "page_pos_w", "lengths")
 
+
+def _splice_slot(cache, one, i):
+    """Copy sequence 0 of a B=1 cache into slot i of the batch cache.
+
+    One `dynamic_update_slice` per leaf: `one` already has a size-1 batch
+    dim, so the update writes exactly the slot's stripe.  Jit this with a
+    donated `cache` so XLA updates the pools in place instead of copying
+    the whole pool per admit.
+    """
     updates = {}
-    for f in dc.fields(cache):
+    for f in dataclasses.fields(cache):
         cur, new = getattr(cache, f.name), getattr(one, f.name)
         if cur is None:
             continue
         # batch axis position: leaf layouts are [L, B, ...] or [B, ...]
-        if f.name in ("page_table_g", "page_pos_w", "lengths"):
+        ax = 0 if f.name in _BATCH_AXIS0 else 1
+        start = tuple(jnp.asarray(i if d == ax else 0, jnp.int32)
+                      for d in range(cur.ndim))
+        updates[f.name] = jax.lax.dynamic_update_slice(
+            cur, new.astype(cur.dtype), start)
+    return dataclasses.replace(cache, **updates)
+
+
+def _splice_slot_ref(cache, one, i: int):
+    """Eager reference splice (the old O(pool) path) — kept for tests."""
+    updates = {}
+    for f in dataclasses.fields(cache):
+        cur, new = getattr(cache, f.name), getattr(one, f.name)
+        if cur is None:
+            continue
+        if f.name in _BATCH_AXIS0:
             updates[f.name] = cur.at[i].set(new[0])
         else:
             updates[f.name] = cur.at[:, i].set(new[:, 0])
-    return dc.replace(cache, **updates)
+    return dataclasses.replace(cache, **updates)

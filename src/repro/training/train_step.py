@@ -128,7 +128,8 @@ def make_compressed_train_step(cfg: ModelConfig, rt: Runtime,
     batch_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
 
     def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
-        fn = jax.shard_map(
+        from repro.core.seqpar import shard_map
+        fn = shard_map(
             local_grads, mesh=mesh,
             in_specs=(P(), P(), batch_spec),
             out_specs=(P(), P(), P()),

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.wkv6 import wkv6
 from repro.models.rwkv6 import wkv_chunked, wkv_recurrent

@@ -50,11 +50,9 @@ def test_multipod_batch_axes():
 def test_quantized_weight_shardings():
     import jax.numpy as jnp
     from repro.core.quant import quantize_weight, QuantizedWeight
-    from jax.sharding import Mesh, AxisType
-    import numpy as np
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
-                ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    from repro.distributed.sharding import make_mesh_compat
+    mesh = make_mesh_compat((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])
     w = jnp.ones((64, 32))
     qw = quantize_weight(w, "w4a16")
     specs = QuantizedWeight(("embed", "mlp"), ("mlp",), "w4a16", (64, 32))
