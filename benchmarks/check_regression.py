@@ -1,0 +1,99 @@
+"""Bench-regression gate for the CI `bench` job.
+
+`benchmarks/run.py` APPENDS the current run's kernel rows to the committed
+``BENCH_kernels.json`` trajectory; this script compares that freshest run
+against the per-entry MEDIAN of the committed trajectory and fails
+(exit 1) if any kernel entry's ``us_per_call`` regressed by more than
+``--threshold`` (default 20%).
+
+  python benchmarks/run.py            # appends the current run
+  python benchmarks/check_regression.py
+
+Entries faster than ``--min-us`` in the baseline are skipped (CI-runner
+timer noise dominates sub-50µs calls); entries that appear or disappear
+between runs are reported but never fail the build (renames land with the
+PR that introduces them).
+
+Known limitation: the trajectory mixes machines (dev boxes commit runs,
+CI appends its own), and absolute wall times do not transfer across CPU
+models.  The median baseline + best-of-iters timing absorb load noise,
+not machine skew — when the fleet changes, re-baseline by committing a
+few runs from the new machine (the median follows the majority).
+"""
+import argparse
+import json
+import pathlib
+import statistics
+import sys
+
+DEFAULT_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_kernels.json"
+
+
+def trajectory_baseline(runs):
+    """Per-entry MEDIAN over the committed runs: tolerant of one noisy
+    committed run, without ratcheting down to an unbeatable best-case."""
+    series = {}
+    for run in runs:
+        for r in run["rows"]:
+            series.setdefault(r["name"], []).append(r["us_per_call"])
+    return [{"name": n, "us_per_call": statistics.median(v)}
+            for n, v in series.items()]
+
+
+def compare(baseline_rows, current_rows, threshold: float, min_us: float):
+    """Returns (regressions, notes): regressions are (name, old, new)."""
+    base = {r["name"]: r["us_per_call"] for r in baseline_rows}
+    cur = {r["name"]: r["us_per_call"] for r in current_rows}
+    regressions, notes = [], []
+    for name in sorted(set(base) | set(cur)):
+        if name not in cur:
+            notes.append(f"entry removed: {name}")
+            continue
+        if name not in base:
+            notes.append(f"new entry (no baseline): {name}")
+            continue
+        old, new = base[name], cur[name]
+        if old < min_us:
+            notes.append(f"skipped (baseline {old:.1f}us < {min_us:.0f}us "
+                         f"noise floor): {name}")
+            continue
+        if new > old * (1.0 + threshold):
+            regressions.append((name, old, new))
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", type=pathlib.Path, default=DEFAULT_PATH)
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="fractional slowdown that fails the build")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip entries whose baseline is below this")
+    args = ap.parse_args(argv)
+
+    if not args.path.exists():
+        print(f"[check_regression] {args.path} missing — nothing to gate")
+        return 0
+    runs = json.loads(args.path.read_text())
+    if len(runs) < 2:
+        print(f"[check_regression] only {len(runs)} run(s) in trajectory — "
+              "need a committed baseline plus the current run; passing")
+        return 0
+    current = runs[-1]
+    baseline_rows = trajectory_baseline(runs[:-1])
+    regressions, notes = compare(baseline_rows, current["rows"],
+                                 args.threshold, args.min_us)
+    for n in notes:
+        print(f"[check_regression] note: {n}")
+    print(f"[check_regression] trajectory median of {len(runs) - 1} "
+          f"committed run(s) vs current {current['timestamp']}: "
+          f"{len(regressions)} regression(s) at >{args.threshold:.0%}")
+    for name, old, new in regressions:
+        print(f"  REGRESSED {name}: {old:.1f}us -> {new:.1f}us "
+              f"({new / old - 1.0:+.1%})")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

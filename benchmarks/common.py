@@ -1,6 +1,5 @@
 """Shared benchmark helpers: CSV rows `name,us_per_call,derived`."""
 import math
-import sys
 import time
 
 # every emit() lands here too, so the harness (benchmarks/run.py) can dump
@@ -20,10 +19,15 @@ def emit(name: str, us_per_call: float, derived: str):
 
 
 def time_fn(fn, *args, warmup=1, iters=5):
+    """Best-of-iters wall time in µs.  The MIN is the right statistic for
+    a regression-gated trajectory (benchmarks/check_regression.py): timer
+    noise on shared CI runners is strictly additive, so the mean flaps
+    with machine load while the min tracks the code's actual cost."""
     for _ in range(warmup):
         fn(*args)
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    dt = (time.perf_counter() - t0) / iters
-    return dt * 1e6, out
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out

@@ -1,8 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and
-appends the kernel rows of each run to ``BENCH_kernels.json`` so kernel
-perf has a machine-readable trajectory across commits.
+appends each run's rows to per-prefix trajectory artifacts
+(``BENCH_kernels.json``, ``BENCH_serving.json``) so kernel and serving
+perf have a machine-readable history across commits — the CI bench job
+uploads them and gates on ``benchmarks/check_regression.py``.
 """
 import json
 import pathlib
@@ -10,30 +12,37 @@ import sys
 import time
 import traceback
 
-BENCH_KERNELS_PATH = pathlib.Path(__file__).resolve().parent.parent \
-    / "BENCH_kernels.json"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+# row-name prefix -> committed trajectory artifact
+ARTIFACTS = {
+    "kernels/": REPO_ROOT / "BENCH_kernels.json",
+    "serving/": REPO_ROOT / "BENCH_serving.json",
+}
+BENCH_KERNELS_PATH = ARTIFACTS["kernels/"]
 
 
-def _write_kernels_artifact():
+def _write_artifacts():
     from benchmarks import common
-    rows = [r for r in common.RECORDS if r["name"].startswith("kernels/")]
-    if not rows:
-        return
-    runs = []
-    if BENCH_KERNELS_PATH.exists():
-        try:
-            runs = json.loads(BENCH_KERNELS_PATH.read_text())
-        except (json.JSONDecodeError, OSError):
-            runs = []
-    runs.append({"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-                 "rows": rows})
-    BENCH_KERNELS_PATH.write_text(json.dumps(runs, indent=2) + "\n")
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
+    for prefix, path in ARTIFACTS.items():
+        rows = [r for r in common.RECORDS if r["name"].startswith(prefix)]
+        if not rows:
+            continue
+        runs = []
+        if path.exists():
+            try:
+                runs = json.loads(path.read_text())
+            except (json.JSONDecodeError, OSError):
+                runs = []
+        runs.append({"timestamp": stamp, "rows": rows})
+        path.write_text(json.dumps(runs, indent=2) + "\n")
 
 
 def main() -> None:
     from benchmarks import (
         cost_analysis, fig5_reliability, fig12_throughput, fig13_breakdown,
         fig14_ablation, fig15_dse, fig16_energy, kernels_bench,
+        serving_bench,
     )
     print("name,us_per_call,derived")
     modules = [
@@ -41,6 +50,7 @@ def main() -> None:
         ("fig14", fig14_ablation), ("fig15", fig15_dse),
         ("fig16", fig16_energy), ("fig5", fig5_reliability),
         ("cost", cost_analysis), ("kernels", kernels_bench),
+        ("serving", serving_bench),
     ]
     failed = []
     for name, mod in modules:
@@ -51,7 +61,7 @@ def main() -> None:
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}",
                   file=sys.stderr)
             traceback.print_exc()
-    _write_kernels_artifact()
+    _write_artifacts()
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

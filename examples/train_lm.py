@@ -11,7 +11,6 @@ Kill it mid-run and re-invoke: it restores the newest checkpoint and the
 exact data cursor (tests/test_multidevice.py covers elastic restore).
 """
 import argparse
-import sys
 
 from repro.launch.train import train
 

@@ -14,7 +14,6 @@ used — `latest_step` only reports directories with a valid manifest.
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os
@@ -22,7 +21,7 @@ import shutil
 import tempfile
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,10 +7,8 @@ config of the same family (small widths / few experts / tiny vocab).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration

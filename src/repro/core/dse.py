@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.configs.base import EngineConfig, ModelConfig, get_config
 from repro.core import flashsim as fs

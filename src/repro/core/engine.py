@@ -260,10 +260,16 @@ class KVNANDEngine:
             base, window = self._page_pos_w_new, cfg.window
         else:
             kname, vname, idx = "k_pages_g", "v_pages_g", g_idx
+            NP = pools[kname].shape[3]
             logical = lengths // T
             phys = jnp.take_along_axis(self._table, logical[:, None],
                                        axis=1)[:, 0]
             base, window = self._base_g, None
+        if self._active is not None:
+            # interleaved scheduler: slots mid-prefill (or empty) must not
+            # append — redirect their page index out of range so the
+            # mode="drop" scatter discards the write
+            phys = jnp.where(self._active, phys, NP)
         page_axes = (plan.page_axes_w if use_window else plan.page_axes_g)
         sharded = (self.mesh is not None and self.mesh.size > 1
                    and bool(page_axes))
@@ -331,6 +337,8 @@ class KVNANDEngine:
             sout, s_new, tail_new = ssm_mod.ssm_decode_step(
                 pl_["ssm"], cfg, h, st["ssm_state"], st["conv_tail"])
             aout = (aout + sout) * 0.5
+            s_new, tail_new = self._mask_state(
+                (s_new, st["ssm_state"]), (tail_new, st["conv_tail"]))
             states["ssm_state"] = states["ssm_state"].at[l_idx].set(s_new)
             states["conv_tail"] = states["conv_tail"].at[l_idx].set(
                 tail_new.astype(states["conv_tail"].dtype))
@@ -350,6 +358,17 @@ class KVNANDEngine:
             ff = mlp(pl_["mlp"], h, cfg.gated_mlp)
         return ((x + ff, states), pools)
 
+    def _mask_state(self, *pairs):
+        """Freeze recurrent-state updates for inactive slots: each pair is
+        (new, old) with a leading batch dim; returns the masked news."""
+        if self._active is None:
+            return [new for new, _ in pairs] if len(pairs) > 1 else pairs[0][0]
+        out = []
+        for new, old in pairs:
+            act = self._active.reshape((-1,) + (1,) * (new.ndim - 1))
+            out.append(jnp.where(act, new, old.astype(new.dtype)))
+        return out if len(pairs) > 1 else out[0]
+
     def _rwkv_decode_block(self, pl_, x, states, l_idx):
         cfg = self.cfg
         h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
@@ -368,11 +387,14 @@ class KVNANDEngine:
         v = dense(cm, "cv", k)
         r = jax.nn.sigmoid(dense(cm, "cr", xr))
         x = x + r * v
+        s_new, shift_new, shift2_new = self._mask_state(
+            (s_new, st), (shift_new, sh),
+            (h[:, -1], self._layer_slice(states["rwkv_shift2"], l_idx)))
         states["rwkv_state"] = states["rwkv_state"].at[l_idx].set(s_new)
         states["rwkv_shift"] = states["rwkv_shift"].at[l_idx].set(
             shift_new.astype(states["rwkv_shift"].dtype))
         states["rwkv_shift2"] = states["rwkv_shift2"].at[l_idx].set(
-            h[:, -1].astype(states["rwkv_shift2"].dtype))
+            shift2_new.astype(states["rwkv_shift2"].dtype))
         return x, states
 
     def _cross_attention(self, pcross, h, ck, cv, plan: ShardPlan):
@@ -402,9 +424,21 @@ class KVNANDEngine:
         return {n: getattr(cache, n) for n in names
                 if getattr(cache, n) is not None}
 
-    def decode_step(self, params, cache: DecodeCache, tokens: jax.Array):
-        """tokens: [B, 1] -> (logits [B, V], updated cache)."""
+    def decode_step(self, params, cache: DecodeCache, tokens: jax.Array,
+                    active: Optional[jax.Array] = None):
+        """tokens: [B, 1] -> (logits [B, V], updated cache).
+
+        active: optional [B] bool mask (interleaved continuous batching):
+        inactive slots — empty, or mid-way through a chunked prefill — get
+        no KV append, no length advance, and frozen recurrent state, so a
+        decode step never perturbs a stripe another path is filling.  Their
+        logits are computed (the batch is dense) and ignored by the host.
+        """
         cfg, rt = self.cfg, self.rt
+        if active is not None and self.eng.uniform_lengths:
+            raise ValueError("active-mask decode requires the ragged "
+                             "(uniform_lengths=False) append path")
+        self._active = active
         B = tokens.shape[0]
         lengths = cache.lengths
         NPg = (cache.k_pages_g.shape[3]
@@ -428,8 +462,11 @@ class KVNANDEngine:
             slot = lengths % T
             newp = cache.page_pos_w.at[jnp.arange(B), phys].set(
                 lengths - slot)
+            fresh = (slot == 0)
+            if active is not None:
+                fresh = fresh & active
             self._page_pos_w_new = jnp.where(
-                (slot == 0)[:, None], newp, cache.page_pos_w)
+                fresh[:, None], newp, cache.page_pos_w)
         else:
             self._page_pos_w_new = None
 
@@ -468,7 +505,8 @@ class KVNANDEngine:
         updates.update(states)
         if self._page_pos_w_new is not None:
             updates["page_pos_w"] = self._page_pos_w_new
-        updates["lengths"] = lengths + 1
+        updates["lengths"] = (lengths + 1 if active is None
+                              else lengths + active.astype(lengths.dtype))
         new_cache = dataclasses.replace(cache, **updates)
         logits = lm_head_logits(params, cfg, x)[:, 0]
         return logits, new_cache
@@ -709,3 +747,297 @@ class KVNANDEngine:
         states["rwkv_shift2"] = states["rwkv_shift2"].at[l_idx].set(
             h[:, -1].astype(states["rwkv_shift2"].dtype))
         return x, states
+
+    # ------------------------------------------------------------------
+    # chunked prefill (interleaved continuous batching)
+    # ------------------------------------------------------------------
+    def prefill_chunk(self, params, cache: DecodeCache,
+                      batch: Dict[str, jax.Array], slot, start, chunk_len,
+                      *, first: bool = False):
+        """Process one page-aligned chunk of ONE slot's prompt directly
+        into that slot's stripe of the SHARED paged pool.
+
+        This replaces the admit-time "prefill into a one-sequence cache,
+        then splice" dance: each chunk's K/V lands exactly once, in place,
+        so admission costs O(chunk) instead of O(prompt) + O(pool-splice),
+        and a chunk can share a scheduler step with the decode batch.
+
+        batch["tokens"]: [1, C] chunk tokens (C static — the scheduler's
+        chunk bucket); slot/start/chunk_len: traced scalars — the batch
+        row, the absolute cache position of the chunk's first token
+        (page-aligned: ``start % page_tokens == 0``), and the number of
+        valid tokens in the chunk (the rest is bucket padding).
+        first=True (static) routes through `embed_inputs` so frontend
+        prefixes (hymba meta tokens) are prepended, and skips the
+        past-context partial; it is required for ssm/hybrid continuations
+        to start from zero state, and for any arch whose prefix would
+        break page alignment of later chunks (those use one whole-prompt
+        chunk).
+
+        Per attention layer the chunk runs two partial attentions merged
+        by log-sum-exp (the NPU softmax-aggregation of Fig 8, applied at
+        chunk granularity): a causal in-chunk partial over the chunk's own
+        fresh K/V, and a past-context partial read from the slot's already
+        written pages (dequantized page-wise for kv8/kv4 pools) — then the
+        chunk's K/V are filled into the stripe as whole pages (quantized
+        pools get bit-identical codes to the one-shot prefill fill).
+        Recurrent families carry (state, shift) per slot instead.
+
+        Returns (logits [1, V] at the chunk's last valid token, cache).
+        The scheduler samples from the logits only on the final chunk.
+        """
+        cfg, rt = self.cfg, self.rt
+        if cfg.is_encoder_decoder:
+            raise ValueError("chunked prefill does not support "
+                             "encoder-decoder archs (cross-KV is built by "
+                             "full prefill)")
+        mesh_on = self.mesh is not None and self.mesh.size > 1
+        if mesh_on and (cfg.window is not None
+                        or cfg.family in ("ssm", "hybrid")):
+            raise NotImplementedError(
+                "sharded chunked prefill covers global-pool attention "
+                "archs; window-ring / recurrent archs are single-host")
+        slot = jnp.asarray(slot, jnp.int32)
+        start = jnp.asarray(start, jnp.int32)
+        chunk_len = jnp.asarray(chunk_len, jnp.int32)
+
+        if first:
+            x, _ = embed_inputs(params, cfg, batch, rt)
+        else:
+            x = embed_lookup(params["embedding"], batch["tokens"],
+                             rt.activ_dtype)
+        B1, S = x.shape[:2]
+        prefix = S - batch["tokens"].shape[1]
+        q_pos = start + jnp.arange(S, dtype=jnp.int32)
+        positions = q_pos[None]
+        v_len = chunk_len + prefix                 # valid extent incl prefix
+        end = start + v_len
+        T = self.eng.page_tokens
+        page0 = start // T
+
+        B = cache.lengths.shape[0]
+        NPg = (cache.k_pages_g.shape[3]
+               if cache.k_pages_g is not None else 1)
+        plan = plan_sharding(self.mesh, B, NPg)
+        zero = jnp.zeros((), jnp.int32)
+
+        # per-call temporaries shared by every layer of the scan
+        self._ck = dict(slot=slot, start=start, page0=page0, v_len=v_len,
+                        q_pos=q_pos, first=first, plan=plan, mesh_on=mesh_on)
+        if cache.page_table_g is not None:
+            NPg = cache.page_table_g.shape[1]
+            trow = jax.lax.dynamic_slice(cache.page_table_g, (slot, zero),
+                                         (1, NPg))
+            self._ck["base_g"] = jnp.zeros((1, NPg), jnp.int32).at[
+                0, trow[0]].set(jnp.arange(NPg, dtype=jnp.int32) * T)
+        if cache.page_pos_w is not None:
+            NPw = cache.page_pos_w.shape[1]
+            # ring state BEFORE this chunk; chunk 0 rewrote the row, so a
+            # recycled occupant's stale bases are already gone
+            self._ck["pos_w"] = jax.lax.dynamic_slice(
+                cache.page_pos_w, (slot, zero), (1, NPw))
+
+        n_groups = cfg.n_layers // self.period
+        grouped_params = jax.tree.map(
+            lambda a: a.reshape((n_groups, self.period) + a.shape[1:]),
+            params["layers"])
+        pools = self._collect(cache, POOL_G + POOL_W)
+        states = self._collect(cache, STATE_LEAVES)
+
+        idx = {
+            "p": grouped_params,
+            "l0": jnp.arange(n_groups, dtype=jnp.int32) * self.period,
+            "g0": jnp.arange(n_groups, dtype=jnp.int32) * self.g_per_group,
+            "w0": jnp.arange(n_groups, dtype=jnp.int32) * self.w_per_group,
+        }
+
+        def group_body(carry, xs):
+            xc, pools, states = carry
+            for j, is_glob in enumerate(self.pattern):
+                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                xc, pools, states = self._chunk_block(
+                    pl_, xc, positions, is_glob, pools, states,
+                    xs["l0"] + j, xs["g0"] + self._g_off[j],
+                    xs["w0"] + self._w_off[j])
+            return (xc, pools, states), None
+
+        (x, pools, states), _ = jax.lax.scan(
+            group_body, (x, pools, states), idx)
+
+        updates: Dict[str, Any] = dict(pools)
+        updates.update(states)
+        updates["lengths"] = jax.lax.dynamic_update_slice(
+            cache.lengths, jnp.reshape(end, (1,)).astype(cache.lengths.dtype),
+            (slot,))
+        if cache.page_pos_w is not None:
+            NPw = cache.page_pos_w.shape[1]
+            vals = paged_kv.window_page_positions_dyn(end, NPw, T)
+            updates["page_pos_w"] = jax.lax.dynamic_update_slice(
+                cache.page_pos_w, vals[None], (slot, zero))
+        cache = dataclasses.replace(cache, **updates)
+        x_last = jax.lax.dynamic_slice_in_dim(x, v_len - 1, 1, 1)
+        logits = lm_head_logits(params, cfg, x_last)[:, 0]
+        return logits, cache
+
+    def _chunk_past_partial(self, pools, kname, vname, ksname, vsname, idx,
+                            q, base, window):
+        """Past-context partial of the chunk queries vs the slot's stripe."""
+        ck = self._ck
+        fmt = self.eng.kv_quant
+        Lp, B, K, NP, Ts, dh = pools[kname].shape
+        zero = jnp.zeros((), jnp.int32)
+        pidx = (idx, ck["slot"], zero, zero, zero, zero)
+        kp = jax.lax.dynamic_slice(pools[kname], pidx,
+                                   (1, 1, K, NP, Ts, dh))[0]
+        vp = jax.lax.dynamic_slice(pools[vname], pidx,
+                                   (1, 1, K, NP, Ts, dh))[0]
+        ks = vs = None
+        if fmt != "none":
+            sidx = pidx[:4]
+            ks = jax.lax.dynamic_slice(pools[ksname], sidx, (1, 1, K, NP))[0]
+            vs = jax.lax.dynamic_slice(pools[vsname], sidx, (1, 1, K, NP))[0]
+        if ck["mesh_on"] and ck["plan"].page_axes_g:
+            return seqpar.sharded_chunk_attention(
+                q, kp, vp, base, ck["start"], ck["q_pos"], self.mesh,
+                window=window, page_axes=ck["plan"].page_axes_g,
+                impl=self.eng.attn_impl, kv_quant=fmt,
+                k_scale=ks, v_scale=vs)
+        from repro.kernels.paged_attention import paged_chunk_attention
+        return paged_chunk_attention(
+            q, kp, vp, base, ck["start"], ck["q_pos"], window=window,
+            impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks, v_scale=vs)
+
+    def _chunk_block(self, pl_, x, positions, is_glob, pools, states,
+                     l_idx, g_idx, w_idx):
+        cfg, rt = self.cfg, self.rt
+        ck = self._ck
+
+        if cfg.family == "ssm":
+            return self._rwkv_chunk_block(pl_, x, pools, states, l_idx)
+
+        h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(pl_["attn"], cfg, h, positions)
+        use_window = (cfg.window is not None) and not is_glob
+        window = cfg.window if use_window else None
+        scale = cfg.d_head ** -0.5
+
+        # in-chunk causal partial over the chunk's own (full-precision) K/V
+        o, m, l = seqpar._attn_block_partial(
+            q, k, v, ck["q_pos"], ck["start"], causal=True, window=window,
+            is_global=None, scale=scale)
+        if not ck["first"]:
+            # past-context partial from the already-written stripe
+            if use_window:
+                o2, m2, l2 = self._chunk_past_partial(
+                    pools, "k_pages_w", "v_pages_w", "k_scale_w",
+                    "v_scale_w", w_idx, q, ck["pos_w"], window)
+            else:
+                o2, m2, l2 = self._chunk_past_partial(
+                    pools, "k_pages_g", "v_pages_g", "k_scale_g",
+                    "v_scale_g", g_idx, q, ck["base_g"], None)
+            o, m, l = seqpar.merge_two(o, m, l, o2, m2, l2)
+        aout = attn_mod.project_out(pl_["attn"], cfg, o.astype(h.dtype))
+
+        # fill the chunk's K/V into the stripe (whole pages, in place)
+        fmt = self.eng.kv_quant
+        if use_window:
+            names = ("k_pages_w", "v_pages_w", "k_scale_w", "v_scale_w")
+            fill_idx, fill = w_idx, paged_kv.fill_chunk_window_at
+        else:
+            names = ("k_pages_g", "v_pages_g", "k_scale_g", "v_scale_g")
+            fill_idx, fill = g_idx, paged_kv.fill_chunk_global_at
+        for prefix_, kv_seq in (("k", k), ("v", v)):
+            name = names[0] if prefix_ == "k" else names[1]
+            sname = names[2] if prefix_ == "k" else names[3]
+            if ck["mesh_on"] and ck["plan"].page_axes_g and not use_window:
+                out = seqpar.sharded_chunk_fill(
+                    pools[name], kv_seq, fill_idx, ck["slot"], ck["page0"],
+                    ck["v_len"], self.mesh,
+                    batch_axes=ck["plan"].batch_axes,
+                    page_axes=ck["plan"].page_axes_g,
+                    scale=pools.get(sname), kv_quant=fmt)
+            else:
+                out = fill(pools[name], kv_seq, fill_idx, ck["slot"],
+                           ck["page0"], ck["v_len"],
+                           scale=pools.get(sname), kv_quant=fmt)
+            if fmt != "none":
+                pools[name], pools[sname] = out
+            else:
+                pools[name] = out
+
+        if cfg.family == "hybrid":
+            Hs = states["ssm_state"].shape
+            Ts_ = states["conv_tail"].shape
+            if ck["first"]:
+                s0 = jnp.zeros((1,) + Hs[2:], jnp.float32)
+                t0 = jnp.zeros((1,) + Ts_[2:], states["conv_tail"].dtype)
+            else:
+                s0 = jax.lax.dynamic_slice(
+                    states["ssm_state"], (l_idx, ck["slot"], 0, 0),
+                    (1, 1) + Hs[2:])[0]
+                t0 = jax.lax.dynamic_slice(
+                    states["conv_tail"], (l_idx, ck["slot"], 0, 0),
+                    (1, 1) + Ts_[2:])[0]
+            sout, s_new, tail_new = ssm_mod.ssm_mixer(
+                pl_["ssm"], cfg, h, s0, t0)
+            aout = (aout + sout) * 0.5
+            states["ssm_state"] = jax.lax.dynamic_update_slice(
+                states["ssm_state"], s_new[None].astype(jnp.float32),
+                (l_idx, ck["slot"], 0, 0))
+            states["conv_tail"] = jax.lax.dynamic_update_slice(
+                states["conv_tail"],
+                tail_new[None].astype(states["conv_tail"].dtype),
+                (l_idx, ck["slot"], 0, 0))
+        x = x + aout
+
+        h = rms_norm(x, pl_["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            ff = moe(pl_["moe"], h, top_k=cfg.top_k,
+                     capacity_factor=rt.moe_capacity)
+        else:
+            ff = mlp(pl_["mlp"], h, cfg.gated_mlp)
+        return x + ff, pools, states
+
+    def _rwkv_chunk_block(self, pl_, x, pools, states, l_idx):
+        cfg = self.cfg
+        ck = self._ck
+        h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
+        Hs = states["rwkv_state"].shape
+        if ck["first"]:
+            st0 = jnp.zeros((1,) + Hs[2:], jnp.float32)
+            sh0 = jnp.zeros((1, cfg.d_model), h.dtype)
+            sh2 = jnp.zeros((1, cfg.d_model), h.dtype)
+        else:
+            st0 = jax.lax.dynamic_slice(
+                states["rwkv_state"], (l_idx, ck["slot"], 0, 0, 0),
+                (1, 1) + Hs[2:])[0]
+            sh0 = jax.lax.dynamic_slice(
+                states["rwkv_shift"], (l_idx, ck["slot"], 0),
+                (1, 1, cfg.d_model))[0].astype(h.dtype)
+            sh2 = jax.lax.dynamic_slice(
+                states["rwkv_shift2"], (l_idx, ck["slot"], 0),
+                (1, 1, cfg.d_model))[0].astype(h.dtype)
+        tout, s_new, shift_new = rwkv_mod.rwkv_timemix(
+            pl_["tmix"], cfg, h, st0, sh0)
+        x = x + tout
+        h = rms_norm(x, pl_["ln2"], cfg.norm_eps)
+        cm = pl_["cmix"]
+        h_prev = jnp.concatenate([sh2[:, None], h[:, :-1]], axis=1)
+        xk = h + (h_prev - h) * cm["mu_k"].astype(h.dtype)
+        xr = h + (h_prev - h) * cm["mu_r"].astype(h.dtype)
+        kk = jnp.square(jax.nn.relu(dense(cm, "ck", xk)))
+        vv = dense(cm, "cv", kk)
+        rr = jax.nn.sigmoid(dense(cm, "cr", xr))
+        x = x + rr * vv
+        states["rwkv_state"] = jax.lax.dynamic_update_slice(
+            states["rwkv_state"], s_new[None].astype(jnp.float32),
+            (l_idx, ck["slot"], 0, 0, 0))
+        states["rwkv_shift"] = jax.lax.dynamic_update_slice(
+            states["rwkv_shift"],
+            shift_new[None].astype(states["rwkv_shift"].dtype),
+            (l_idx, ck["slot"], 0))
+        states["rwkv_shift2"] = jax.lax.dynamic_update_slice(
+            states["rwkv_shift2"],
+            h[:, -1][None].astype(states["rwkv_shift2"].dtype),
+            (l_idx, ck["slot"], 0))
+        return x, pools, states

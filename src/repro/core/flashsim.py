@@ -24,12 +24,11 @@ Validation anchors (asserted in tests/test_flashsim.py):
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
-from repro.configs.base import ModelConfig, get_config
+from repro.configs.base import ModelConfig
 
 GB = 1e9
 NPU_ROUNDTRIP = 4e-6   # IFC↔NPU softmax exchange latency per head group

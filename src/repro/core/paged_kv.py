@@ -36,7 +36,6 @@ import numpy as np
 
 from repro.configs.base import EngineConfig, ModelConfig
 from repro.core import quant
-from repro.models import rwkv6 as rwkv_mod
 from repro.models import ssm as ssm_mod
 
 
@@ -460,6 +459,94 @@ def fill_window_at_quant(pool, scale, kv_seq, layer, fmt: str):
         pool = pool.at[layer, :, :, sp % NP].set(q[:, :, sp])
         scale = scale.at[layer, :, :, sp % NP].set(s[:, :, sp])
     return pool, scale
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill fills: one slot's page-aligned chunk into the SHARED pool
+# ---------------------------------------------------------------------------
+#
+# The interleaved scheduler prefills each admitted prompt chunk-by-chunk
+# straight into its slot's stripe of the batch pool (no one-sequence
+# side cache, no splice copy).  Chunk starts are page-aligned, so every
+# write lands on whole pages; the chunk's first token occupies physical
+# page `page0` (the prefill page table is identity, logical == physical).
+# Only pages holding at least one of the chunk's `valid_len` real tokens
+# are written — bucket-padding pages are skipped, and a page index past
+# the stripe is dropped rather than clamped into a live page.
+
+def _fill_chunk_pages(pool, kv_chunk, layer, slot, page_of, valid_of, *,
+                      scale, kv_quant: str):
+    """Shared chunk-fill body: paginate (+quantize), then one guarded
+    `dynamic_update_slice` of page (+scale) per chunk page.
+
+    page_of(sp) -> traced physical page index (already in range);
+    valid_of(sp) -> traced bool, False drops the write (keeps `cur`).
+    """
+    B1, C, K, dh = kv_chunk.shape
+    NP, Ts = pool.shape[3], pool.shape[4]
+    T = Ts * (2 if kv_quant == "kv4" else 1)
+    x = _paged_from_seq(kv_chunk, T)               # [1, K, n_pages, Ts, dh]
+    n_pages = x.shape[2]
+    if kv_quant != "none":
+        x, s_all = quant.quantize_kv_page(x, kv_quant)
+    zero = jnp.zeros((), jnp.int32)
+    for sp in range(n_pages):                      # static trip count
+        gp = page_of(sp)
+        ok = valid_of(sp)
+        pidx = (layer, slot, zero, gp, zero, zero)
+        cur = jax.lax.dynamic_slice(pool, pidx, (1, 1, K, 1, Ts, dh))
+        page = jax.lax.dynamic_slice_in_dim(x, sp, 1, axis=2)  # [1,K,1,*]
+        pool = jax.lax.dynamic_update_slice(
+            pool, jnp.where(ok, page[:, None].astype(pool.dtype), cur),
+            pidx)
+        if kv_quant != "none":
+            sidx = (layer, slot, zero, gp)
+            s_pg = jax.lax.dynamic_slice_in_dim(s_all, sp, 1, axis=2)
+            cur_s = jax.lax.dynamic_slice(scale, sidx, (1, 1, K, 1))
+            scale = jax.lax.dynamic_update_slice(
+                scale, jnp.where(ok, s_pg[:, None], cur_s), sidx)
+    if kv_quant != "none":
+        return pool, scale
+    return pool
+
+
+def fill_chunk_global_at(pool, kv_chunk, layer, slot, page0, valid_len, *,
+                         scale=None, kv_quant: str = "none"):
+    """Write one slot's prompt chunk into its stripe of the global pool.
+
+    pool: [L, B, K, NP, Ts, dh] (in-place carry); kv_chunk: [1, C, K, dh];
+    layer/slot/page0/valid_len: traced scalars.  A write past the stripe
+    is dropped, never clamped into a live page.  Quantized pools (kv8/kv4)
+    quantize whole pages exactly as `fill_prefill_at_quant`, so a page
+    produced chunk-by-chunk is bit-identical to the one-shot fill's page.
+    Returns pool, or (pool, scale) when quantized.
+    """
+    NP, T = pool.shape[3], pool.shape[4] * (2 if kv_quant == "kv4" else 1)
+    return _fill_chunk_pages(
+        pool, kv_chunk, layer, slot,
+        lambda sp: jnp.clip(page0 + sp, 0, NP - 1),
+        lambda sp: (sp * T < valid_len) & (page0 + sp < NP),
+        scale=scale, kv_quant=kv_quant)
+
+
+def fill_chunk_window_at(pool, kv_chunk, layer, slot, page0, valid_len, *,
+                         scale=None, kv_quant: str = "none"):
+    """Ring variant of `fill_chunk_global_at` for the window pool.
+
+    Chunk page `page0 + sp` lands in ring slot `(page0 + sp) % NP`.
+    Page-aligned chunk starts mean every global page is written exactly
+    once across the whole prefill; when the chunk spans more pages than
+    the ring, ascending order + the valid-page guard leave each ring slot
+    holding its NEWEST valid occupant (a trailing padding page must not
+    shadow the valid page `NP` positions older).  Base positions are
+    derived by the engine (`window_page_positions_dyn`), not here.
+    """
+    NP, T = pool.shape[3], pool.shape[4] * (2 if kv_quant == "kv4" else 1)
+    return _fill_chunk_pages(
+        pool, kv_chunk, layer, slot,
+        lambda sp: (page0 + sp) % NP,
+        lambda sp: sp * T < valid_len,
+        scale=scale, kv_quant=kv_quant)
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,7 @@ unchanged — `layers.dense` dispatches on the leaf type.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ and retires blocks at the read-disturb limit (trading spare capacity).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 

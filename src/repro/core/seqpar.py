@@ -73,12 +73,22 @@ def combine_partials(o, m, l, axis_names: Sequence[str]):
 
     o: [..., dh] locally-normalized partial outputs; m/l: [...] stats.
     """
+    o, _, _ = combine_partials_stats(o, m, l, axis_names)
+    return o
+
+
+def combine_partials_stats(o, m, l, axis_names: Sequence[str]):
+    """`combine_partials` that also returns the combined (m, ℓ) stats, for
+    callers that merge the cross-device result with FURTHER partials (the
+    chunked-prefill path merges the sharded past-context partial with the
+    in-chunk causal partial via `merge_two`)."""
     ax = tuple(axis_names)
     M = jax.lax.pmax(m, ax)
     w = l * jnp.exp(m - M)
-    denom = jnp.maximum(jax.lax.psum(w, ax), 1e-30)
+    L = jax.lax.psum(w, ax)
+    denom = jnp.maximum(L, 1e-30)
     o = jax.lax.psum(o * w[..., None], ax) / denom[..., None]
-    return o
+    return o, M, L
 
 
 # ---------------------------------------------------------------------------
@@ -417,6 +427,111 @@ def sharded_window_fill(pool, kv_seq, layer, mesh: Mesh, *,
     return shard_map(local, mesh=mesh, in_specs=(pspec, kvspec, P()),
                      out_specs=pspec, check_vma=False)(
         pool, kv, jnp.asarray(layer, jnp.int32))
+
+
+def sharded_chunk_fill(pool, kv_chunk, layer, slot, page0, valid_len,
+                       mesh: Mesh, *,
+                       batch_axes: Sequence[str] = ("data",),
+                       page_axes: Sequence[str] = ("model",),
+                       scale=None, kv_quant: str = "none"):
+    """Chunked-prefill fill of ONE slot's stripe in the sharded stacked
+    global pool [L, B, K, NP, Ts, dh]: each shard writes only the
+    intersection of its local page range with the chunk's pages, and only
+    when it owns the slot's batch row — the direct G2-die write of the
+    paper, at chunk granularity.  kv_chunk [1, C, K, dh] is replicated
+    (chunk bytes are tiny against the pool).  Pages holding none of the
+    `valid_len` real tokens are skipped; quantized pools (kv8/kv4) get
+    whole-page codes + per-page scales.  Returns pool or (pool, scale).
+    """
+    from repro.core.paged_kv import _fill_chunk_pages
+
+    L, Bt, K, NP, Ts, dh = pool.shape
+    T = Ts * (2 if kv_quant == "kv4" else 1)
+    bspec = _axes_spec(batch_axes)
+    pspec = P(None, bspec, None, _axes_spec(page_axes), None, None)
+    sspec = P(None, bspec, None, _axes_spec(page_axes))
+    kvspec = P(None, None, None, None)
+
+    def local(pool_l, kvv, lyr, sl, p0, n_valid, scale_l=None):
+        # same body as the single-device fills — only the page/slot
+        # coordinates shift into shard-local space, and writes outside
+        # this shard's (batch row × page range) drop via valid_of
+        _, Bl, _, NPl, _, _ = pool_l.shape
+        b_off = _shard_page_offset(batch_axes, Bl)   # generic linear offset
+        p_off = _shard_page_offset(page_axes, NPl)
+        sl_loc = sl - b_off
+        own_b = (sl_loc >= 0) & (sl_loc < Bl)
+        return _fill_chunk_pages(
+            pool_l, kvv, lyr, jnp.clip(sl_loc, 0, Bl - 1),
+            lambda sp: jnp.clip(p0 + sp - p_off, 0, NPl - 1),
+            lambda sp: (own_b & (p0 + sp - p_off >= 0)
+                        & (p0 + sp - p_off < NPl) & (sp * T < n_valid)),
+            scale=scale_l, kv_quant=kv_quant)
+
+    args = (jnp.asarray(layer, jnp.int32), jnp.asarray(slot, jnp.int32),
+            jnp.asarray(page0, jnp.int32), jnp.asarray(valid_len, jnp.int32))
+    if kv_quant != "none":
+        def local_q(pool_l, scale_l, kvv, lyr, sl, p0, n_valid):
+            return local(pool_l, kvv, lyr, sl, p0, n_valid, scale_l)
+        return shard_map(local_q, mesh=mesh,
+                         in_specs=(pspec, sspec, kvspec, P(), P(), P(), P()),
+                         out_specs=(pspec, sspec), check_vma=False)(
+            pool, scale, kv_chunk, *args)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pspec, kvspec, P(), P(), P(), P()),
+                     out_specs=pspec, check_vma=False)(pool, kv_chunk, *args)
+
+
+def sharded_chunk_attention(q, k_pages, v_pages, page_base, start, q_pos,
+                            mesh: Mesh, *,
+                            window: Optional[int] = None,
+                            page_axes: Sequence[str] = ("model",),
+                            impl: str = "auto",
+                            kv_quant: str = "none",
+                            k_scale=None, v_scale=None):
+    """Past-context partial attention of one slot's chunk queries against
+    its page-sharded stripe (chunked prefill on a mesh).
+
+    q: [1, S, H, dh] replicated chunk queries; pages: [1, K, NP, Ts, dh]
+    the slot's stripe (batch row already sliced out), NP sharded over
+    `page_axes`; page_base: [1, NP] absolute positions.  Each shard runs
+    the chunk-attention oracle over its local pages and the partials merge
+    via the log-sum-exp combine (the NPU softmax aggregation, at chunk
+    granularity).  Returns REPLICATED combined (o, m, ℓ) so the caller can
+    merge with the in-chunk causal partial.
+    """
+    from repro.kernels.paged_attention.ops import paged_chunk_attention
+
+    n_page_shards = 1
+    for a in page_axes:
+        n_page_shards *= mesh.shape[a]
+
+    qspec = P(None, None, None, None)
+    pspec = P(None, None, _axes_spec(page_axes), None, None)
+    sspec = P(None, None, _axes_spec(page_axes))
+    basespec = P(None, _axes_spec(page_axes))
+
+    def run(qq, kp, vp, base, st, qp, ks=None, vs=None):
+        o, m, l = paged_chunk_attention(
+            qq, kp, vp, base, st, qp, window=window, impl=impl,
+            kv_quant=kv_quant, k_scale=ks, v_scale=vs)
+        if n_page_shards > 1:
+            o, m, l = combine_partials_stats(o, m, l, tuple(page_axes))
+        return o, m, l
+
+    out_specs = (qspec, P(None, None, None), P(None, None, None))
+    if kv_quant != "none":
+        return shard_map(run, mesh=mesh,
+                         in_specs=(qspec, pspec, pspec, basespec, P(), P(None),
+                                   sspec, sspec),
+                         out_specs=out_specs, check_vma=False)(
+            q, k_pages, v_pages, page_base, jnp.asarray(start, jnp.int32),
+            q_pos, k_scale, v_scale)
+    return shard_map(run, mesh=mesh,
+                     in_specs=(qspec, pspec, pspec, basespec, P(), P(None)),
+                     out_specs=out_specs, check_vma=False)(
+        q, k_pages, v_pages, page_base, jnp.asarray(start, jnp.int32), q_pos)
 
 
 def paged_decode_attention_sharded(

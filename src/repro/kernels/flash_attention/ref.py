@@ -7,7 +7,6 @@ materializing the [Sq, Sk] score matrix.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -1,5 +1,9 @@
-from repro.kernels.paged_attention.ops import paged_attention_partial  # noqa
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attention_partial,
+    paged_chunk_attention,
+)
 from repro.kernels.paged_attention.ref import (  # noqa: F401
     paged_attention_partial_ref,
+    paged_chunk_attention_ref,
     paged_to_dense,
 )

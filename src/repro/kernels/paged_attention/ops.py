@@ -1,18 +1,37 @@
 """Public wrapper for partial paged decode attention with impl dispatch."""
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention.kernel import paged_attention_pallas
-from repro.kernels.paged_attention.ref import paged_attention_partial_ref
+from repro.kernels.paged_attention.ref import (paged_attention_partial_ref,
+                                               paged_chunk_attention_ref)
 
 
 def default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def paged_chunk_attention(q, k_pages, v_pages, page_base, start, q_pos, *,
+                          window: Optional[int] = None, impl: str = "auto",
+                          kv_quant: str = "none", k_scale=None,
+                          v_scale=None):
+    """Impl dispatch for the chunked-prefill past-context partial.
+
+    Mirrors `paged_attention_partial` so `EngineConfig.attn_impl` stays
+    authoritative for both partials.  There is no Pallas chunk kernel yet
+    (the natural follow-up): every impl — including "pallas" — currently
+    lowers to the jnp oracle, which materializes O(S·NP·T) scores per
+    layer; `impl` is accepted now so call sites don't change when the
+    kernel lands.
+    """
+    del impl                      # single implementation today (see above)
+    return paged_chunk_attention_ref(
+        q, k_pages, v_pages, page_base, start, q_pos, window=window,
+        kv_quant=kv_quant, k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_attention_partial(

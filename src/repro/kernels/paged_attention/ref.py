@@ -83,6 +83,75 @@ def paged_attention_partial_ref(
     return (o.reshape(B, H, dh), m.reshape(B, H), l.reshape(B, H))
 
 
+def paged_chunk_attention_ref(
+    q: jax.Array,          # [B, S, H, dh] chunk queries (B = one slot)
+    k_pages: jax.Array,    # [B, K, NP, T, dh] the slot's page stripe
+    v_pages: jax.Array,
+    page_base: jax.Array,  # [B, NP] absolute pos of slot 0 (<0 = unwritten)
+    start: jax.Array,      # scalar: absolute position of the chunk's first
+                           # token — only keys strictly BELOW start attend
+    q_pos: jax.Array,      # [S] absolute query positions
+    *,
+    window: Optional[int] = None,
+    kv_quant: str = "none",
+    k_scale: Optional[jax.Array] = None,   # [B, K, NP] per-page×head scales
+    v_scale: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Past-context partial attention for chunked prefill (validation ref).
+
+    Multi-query generalization of `paged_attention_partial_ref`: every
+    query of an S-token prompt chunk attends the slot's already-written
+    pages.  The chunk's own K/V are handled by the in-chunk causal partial
+    (`seqpar._attn_block_partial`), so keys at positions ≥ `start` — which
+    may hold a recycled occupant's stale pages — are masked here, and the
+    two partials merge via log-sum-exp (`seqpar.merge_two`).
+
+    Returns locally-normalized (o [B,S,H,dh], m [B,S,H], ℓ [B,S,H]); a
+    query whose whole window lies inside the chunk gets ℓ = 0 and thus
+    zero weight in the merge.
+    """
+    B, K, NP = k_pages.shape[:3]
+    dh = k_pages.shape[-1]
+    T = 2 * k_pages.shape[3] if kv_quant == "kv4" else k_pages.shape[3]
+    S, H = q.shape[1], q.shape[2]
+    G = H // K
+    scale = dh ** -0.5
+
+    if kv_quant != "none":
+        from repro.core.quant import unpack_int4_tokens
+        if kv_quant == "kv4":
+            k_pages = unpack_int4_tokens(k_pages)
+            v_pages = unpack_int4_tokens(v_pages)
+        k_pages = k_pages.astype(jnp.float32)
+        v_pages = v_pages.astype(jnp.float32)
+    dt = k_pages.dtype
+    qg = (q.astype(jnp.float32) * scale).astype(dt).reshape(B, S, K, G, dh)
+
+    pos = page_base[:, :, None] + jnp.arange(T)[None, None, :]   # [B, NP, T]
+    valid = (page_base >= 0)[:, :, None] & (pos < start)
+    mask = valid[:, None, None, None]                  # [B, 1, 1, 1, NP, T]
+    if window is not None:
+        in_w = pos[:, None] > (q_pos[None, :, None, None] - window)
+        mask = mask & in_w[:, None, None]              # [B, 1, 1, S, NP, T]
+
+    s = jnp.einsum("bskgd,bkntd->bkgsnt", qg, k_pages,
+                   preferred_element_type=jnp.float32)  # [B,K,G,S,NP,T]
+    if kv_quant != "none":
+        s = s * k_scale[:, :, None, None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=(-2, -1))                       # [B, K, G, S]
+    p = jnp.exp(s - m[..., None, None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=(-2, -1))                       # [B, K, G, S]
+    pv = p * v_scale[:, :, None, None, :, None] if kv_quant != "none" else p
+    o = jnp.einsum("bkgsnt,bkntd->bskgd", pv.astype(dt), v_pages,
+                   preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return (o.reshape(B, S, H, dh),
+            m.transpose(0, 3, 1, 2).reshape(B, S, H),
+            l.transpose(0, 3, 1, 2).reshape(B, S, H))
+
+
 def paged_to_dense(k_pages, page_base, max_len: int):
     """Test helper: reassemble [B, S, K, dh] from pages by position."""
     B, K, NP, T, dh = k_pages.shape

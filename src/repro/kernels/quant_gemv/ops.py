@@ -10,7 +10,7 @@ from repro.kernels.quant_gemv.kernel import quant_gemv_pallas
 from repro.kernels.quant_gemv.ref import quant_gemv_ref
 
 if TYPE_CHECKING:  # avoid circular import at runtime
-    from repro.core.quant import QuantizedWeight
+    from repro.core.quant import QuantizedWeight  # noqa: F401
 
 
 def default_impl() -> str:

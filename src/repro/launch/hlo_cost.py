@@ -36,9 +36,8 @@ All values are per-device (the HLO is the SPMD-partitioned module).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,

@@ -5,7 +5,7 @@ jax device state).  Single-pod: 16×16 = 256 chips; multi-pod: 2×16×16 = 512.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh

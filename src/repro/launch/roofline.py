@@ -16,9 +16,8 @@ v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Dict, List, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # B/s / chip

@@ -16,7 +16,8 @@ from repro.configs import EngineConfig, get_config
 from repro.core.dse import recommend_engine_config
 from repro.models.registry import Model
 from repro.models.transformer import Runtime
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (ContinuousBatcher, Request,
+                                     SpliceBatcher)
 
 
 def serve(argv=None):
@@ -28,6 +29,13 @@ def serve(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-context", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", choices=("interleaved", "splice"),
+                    default="interleaved",
+                    help="interleaved: chunked prefill shares each step "
+                    "with the decode batch; splice: legacy admit-time "
+                    "full prefill (baseline)")
+    ap.add_argument("--chunk-tokens", type=int, default=64,
+                    help="prefill chunk size (multiple of page_tokens)")
     ap.add_argument("--use-dse", action="store_true",
                     help="pick variant/quant from the Track-A DSE")
     args = ap.parse_args(argv)
@@ -46,9 +54,12 @@ def serve(argv=None):
     model = Model(cfg, Runtime())
     params = model.init(jax.random.PRNGKey(0))
 
-    batcher = ContinuousBatcher(cfg, params, batch_slots=args.slots,
-                                max_context=args.max_context, eng=eng,
-                                temperature=args.temperature)
+    cls = ContinuousBatcher if args.scheduler == "interleaved" \
+        else SpliceBatcher
+    batcher = cls(cfg, params, batch_slots=args.slots,
+                  max_context=args.max_context, eng=eng,
+                  temperature=args.temperature,
+                  prefill_chunk_tokens=args.chunk_tokens)
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
@@ -59,8 +70,13 @@ def serve(argv=None):
     done = batcher.run_to_completion()
     dt = time.time() - t0
     total_tokens = sum(len(r.output) for r in done.values())
+    st = batcher.stats
     print(f"[serve] {len(done)} requests, {total_tokens} tokens in "
           f"{dt:.1f}s ({total_tokens / dt:.1f} tok/s on CPU)")
+    print(f"[serve] scheduler={args.scheduler}: {st['steps']} steps, "
+          f"{st['prefill_chunks']} prefill chunks, {st['compiles']} "
+          f"compiles, {st['decode_stall_tokens']} decode-stall tokens "
+          f"over {st['admits']} admits")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: {len(done[uid].output)} tokens -> "
               f"{done[uid].output[:8]}...")

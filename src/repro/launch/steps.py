@@ -4,7 +4,6 @@ inputs + sharding trees.  Used by the dry-run, the drivers, and benchmarks.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -15,7 +14,6 @@ from repro.configs.base import (
     SHAPES, EngineConfig, ModelConfig, ShapeConfig, get_config,
     shape_applicable,
 )
-from repro.core import paged_kv
 from repro.core.engine import KVNANDEngine, ShardPlan, plan_sharding
 from repro.core.quant import quantize_params_and_specs
 from repro.distributed import sharding as shd

@@ -4,7 +4,6 @@ every (arch × shape) cell (the dry-run contract; no device allocation).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

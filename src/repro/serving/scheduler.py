@@ -1,20 +1,34 @@
 """Continuous-batching scheduler over the KVNAND engine.
 
-Host-side request management around the jit'd decode step:
+Chunked prefill interleaved with batched decode:
+
   * fixed decode batch of B slots; finished/empty slots are refilled from
-    the queue between steps (per-slot prefill into the paged pools);
-  * per-slot lengths are ragged → the engine's general (scatter) append
-    path (`uniform_lengths=False`);
-  * admits splice the one-sequence prefill cache into its slot with a
-    single jit'd `dynamic_update_slice` per leaf (donated cache, so XLA
-    aliases the pools in place) — the eager `.at[:, i].set` path copied
-    the ENTIRE pool per admit;
-  * prompts are padded to power-of-two buckets before prefill so the
-    jit'd prefill compiles once per bucket, not once per distinct prompt
-    length (the engine masks padding via its `prompt_len` argument);
+    the queue between steps;
+  * an admitted prompt is prefilled CHUNK BY CHUNK (page-aligned chunks of
+    `prefill_chunk_tokens`) straight into its slot's stripe of the shared
+    paged pool (`engine.prefill_chunk`) — no one-sequence side cache and
+    no splice copy, so admission costs O(chunk) instead of O(prompt);
+  * every step spends a token budget: the decode batch (one token per
+    active slot) is reserved first, the remainder funds prefill chunks —
+    so a steady stream of admits can never starve the decoders, and an
+    idle decode batch drains the admission queue at full tilt;
+  * decode steps carry an `active` mask so slots that are empty or still
+    mid-prefill get no append / length advance (the ragged scatter path,
+    `uniform_lengths=False`);
+  * per-slot prefill progress (cursor into the prompt, sampled-token
+    handoff; ring base positions live in the cache) is host bookkeeping —
+    `_PrefillState`;
+  * recurrent (ssm/hybrid) and prefix-carrying archs (hymba meta tokens
+    would break page alignment of later chunks) prefill as ONE exact-
+    length whole-prompt chunk — still in place, still spliceless;
   * slot eviction = clearing host bookkeeping — its pages are simply
     overwritten by the next occupant (per-sequence page stripes, the
-    access-aware reuse story of §IV-D).
+    access-aware reuse story of §IV-D); the next occupant's first chunk
+    rewrites the window-ring base row, so stale pages can never alias.
+
+`SpliceBatcher` keeps the old admit-time full prefill + jit'd slot splice
+as the measured baseline (benchmarks/serving_bench.py) and for parity
+tests; the interleaved step never touches the splice path.
 """
 from __future__ import annotations
 
@@ -43,20 +57,48 @@ class Request:
     done: bool = False
 
 
-def bucket_length(n: int, lo: int = MIN_PROMPT_BUCKET) -> int:
-    """Smallest power-of-two bucket (≥ lo) holding n tokens."""
+def bucket_length(n: int, lo: int = MIN_PROMPT_BUCKET,
+                  hi: Optional[int] = None) -> int:
+    """Smallest power-of-two bucket (≥ lo) holding n tokens, clamped to
+    `hi` — near-capacity prompts must not round up past the slot stripe
+    (the caller rejects n > hi at submit)."""
     b = lo
     while b < n:
         b *= 2
+    if hi is not None:
+        b = min(b, hi)
     return b
+
+
+@dataclasses.dataclass
+class _PrefillState:
+    """Host-side carry-over of one slot's in-progress chunked prefill."""
+    req: Request
+    tokens: np.ndarray      # prompt, padded to the chunk grid
+    n: int                  # true prompt length
+    pos: int = 0            # next chunk's first token (prompt-relative)
+    order: int = 0          # admission order (FIFO chunk scheduling)
 
 
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_context: int = 512, eng: Optional[EngineConfig] = None,
                  rt: Optional[Runtime] = None, temperature: float = 0.0,
-                 seed: int = 0, bucket_prompts: bool = True):
+                 seed: int = 0, bucket_prompts: bool = True,
+                 prefill_chunk_tokens: int = 64,
+                 step_token_budget: Optional[int] = None):
         eng = eng or EngineConfig(page_tokens=16, uniform_lengths=False)
+        if eng.uniform_lengths:
+            raise ValueError(
+                "continuous batching needs the ragged append path: pass "
+                "an EngineConfig with uniform_lengths=False (slots advance "
+                "out of lockstep, and masked decode steps require the "
+                "per-sequence scatter)")
+        if prefill_chunk_tokens % eng.page_tokens:
+            raise ValueError(
+                f"prefill_chunk_tokens={prefill_chunk_tokens} must be a "
+                f"multiple of page_tokens={eng.page_tokens} so chunk "
+                "starts stay page-aligned")
         self.cfg = cfg
         self.engine = KVNANDEngine(cfg, eng, rt or Runtime())
         self.params = params
@@ -66,23 +108,57 @@ class ContinuousBatcher:
         # recurrent prefill folds padding into carried state → exact-length
         self.bucket_prompts = (bucket_prompts
                                and cfg.family not in ("ssm", "hybrid"))
+        self.chunk_tokens = prefill_chunk_tokens
+        # ssm/hybrid carry state (padding pollutes it) and meta-token
+        # prefixes break page alignment of later chunks → one exact chunk
+        self._whole_prompt = (cfg.family in ("ssm", "hybrid")
+                              or cfg.n_meta_tokens > 0)
+        self._prefix = cfg.n_meta_tokens
+        self.step_token_budget = (step_token_budget
+                                  or prefill_chunk_tokens + batch_slots)
         self.rng = jax.random.PRNGKey(seed)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.cache = self.engine.init_cache(batch_slots, max_context)
         self._lengths = np.zeros(batch_slots, np.int64)
+        self._prefill_live: Dict[int, _PrefillState] = {}
+        self._admit_seq = 0
         self._decode = jax.jit(
-            lambda p, c, t: self.engine.decode_step(p, c, t))
-        self._prefill1 = jax.jit(
-            lambda p, b: self.engine.prefill(p, b, max_context))
-        self._prefill1_bucketed = jax.jit(
-            lambda p, b, n: self.engine.prefill(p, b, max_context,
-                                                prompt_len=n))
-        self._splice = jax.jit(_splice_slot, donate_argnums=(0,))
+            lambda p, c, t, a: self.engine.decode_step(p, c, t, active=a),
+            donate_argnums=(1,))
+        self._chunk_first = jax.jit(
+            lambda p, c, t, s, st, n: self.engine.prefill_chunk(
+                p, c, {"tokens": t}, s, st, n, first=True),
+            donate_argnums=(1,))
+        self._chunk_cont = jax.jit(
+            lambda p, c, t, s, st, n: self.engine.prefill_chunk(
+                p, c, {"tokens": t}, s, st, n, first=False),
+            donate_argnums=(1,))
         self.completed: Dict[int, Request] = {}
+        self.stats = {"steps": 0, "admits": 0, "prefill_chunks": 0,
+                      "decode_tokens": 0, "decode_stall_tokens": 0,
+                      "compiles": 0}
+        self._compile_keys = set()
 
     # -- host-side slot management ------------------------------------
+    def _count_compile(self, name, *key):
+        """Host-side compile census: one per distinct jit signature."""
+        k = (name,) + key
+        if k not in self._compile_keys:
+            self._compile_keys.add(k)
+            self.stats["compiles"] += 1
+
     def submit(self, req: Request):
+        n = len(req.prompt)
+        cap = self.max_context - 1 - self._prefix
+        if n == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if n > cap:
+            raise ValueError(
+                f"request {req.uid}: prompt of {n} tokens exceeds the slot "
+                f"capacity of {cap} (max_context={self.max_context} minus "
+                f"1 decode token minus {self._prefix} prefix tokens); "
+                "truncate the prompt or enlarge max_context")
         self.queue.append(req)
 
     def _admit(self):
@@ -90,42 +166,88 @@ class ContinuousBatcher:
             if self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
                 self.slots[i] = req
-                self._prefill_slot(i, req)
+                n = len(req.prompt)
+                if self._whole_prompt:
+                    toks = np.asarray(req.prompt, np.int32)
+                else:
+                    C = self.chunk_tokens
+                    toks = np.zeros(-(-n // C) * C, np.int32)
+                    toks[:n] = req.prompt
+                self._prefill_live[i] = _PrefillState(
+                    req, toks, n, order=self._admit_seq)
+                self._admit_seq += 1
+                self.stats["admits"] += 1
 
-    def _prefill_slot(self, i: int, req: Request):
-        """Prefill one sequence and splice its pools/length into slot i."""
-        n = len(req.prompt)
-        if self.bucket_prompts:
-            Sb = min(bucket_length(n), max(self.max_context - 1, n))
-            toks = jnp.asarray(req.prompt + [0] * (Sb - n), jnp.int32)[None]
-            logits, c1 = self._prefill1_bucketed(
-                self.params, {"tokens": toks}, jnp.asarray(n, jnp.int32))
+    def _prefill_tick(self, i: int, ps: _PrefillState):
+        """Process ONE chunk of slot i's prompt into the shared cache."""
+        if self._whole_prompt:
+            chunk, c0, cl = ps.tokens, 0, ps.n
         else:
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, c1 = self._prefill1(self.params, {"tokens": toks})
-        self.cache = self._splice(self.cache, c1,
-                                  jnp.asarray(i, jnp.int32))
-        self._lengths[i] = n
-        self.rng, k = jax.random.split(self.rng)
-        tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
-                         temperature=self.temperature)[0])
-        req.output.append(tok)
+            c0 = ps.pos
+            chunk, cl = ps.tokens[c0:c0 + self.chunk_tokens], \
+                min(self.chunk_tokens, ps.n - c0)
+        fn = self._chunk_first if c0 == 0 else self._chunk_cont
+        self._count_compile("chunk", c0 == 0, len(chunk))
+        logits, self.cache = fn(
+            self.params, self.cache, jnp.asarray(chunk)[None],
+            jnp.asarray(i, jnp.int32), jnp.asarray(c0, jnp.int32),
+            jnp.asarray(cl, jnp.int32))
+        ps.pos = c0 + len(chunk)
+        self.stats["prefill_chunks"] += 1
+        if ps.pos >= ps.n:                         # prompt fully prefilled
+            del self._prefill_live[i]
+            self._lengths[i] = self._prefix + ps.n
+            self.rng, k = jax.random.split(self.rng)
+            tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
+                             temperature=self.temperature)[0])
+            ps.req.output.append(tok)
 
     def step(self) -> int:
-        """One decode step over all active slots; returns #active."""
+        """One interleaved step: a token budget funds the decode batch
+        first (one token per active slot), then prefill chunks (FIFO over
+        admitted prompts) — admits never starve decoders; returns the
+        number of slots that advanced."""
         self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        n_decoding = sum(1 for i, r in enumerate(self.slots)
+                         if r is not None and i not in self._prefill_live)
+        budget = self.step_token_budget - n_decoding
+        chunks_done = 0
+        for i, ps in sorted(self._prefill_live.items(),
+                            key=lambda kv: kv[1].order):
+            cost = ps.n if self._whole_prompt else self.chunk_tokens
+            # always fund at least one chunk (prefill must progress even
+            # under a tiny budget); extra chunks only within budget
+            if chunks_done and budget < cost:
+                break
+            self._prefill_tick(i, ps)
+            budget -= cost
+            chunks_done += 1
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and i not in self._prefill_live]
+        decoded = self._decode_batch(active)
+        self.stats["steps"] += 1
+        return decoded + chunks_done
+
+    def _decode_batch(self, active: List[int]) -> int:
+        """One masked decode over `active` slots: sample, advance lengths,
+        sweep completions (shared by both schedulers — the parity pair
+        must never diverge on this body)."""
         if not active:
             return 0
         tokens = np.zeros((self.B, 1), np.int32)
+        mask = np.zeros(self.B, bool)
         for i in active:
             tokens[i, 0] = self.slots[i].output[-1]
+            mask[i] = True
+        self._count_compile("decode", self.B)
         logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens))
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(mask))
         self.rng, k = jax.random.split(self.rng)
         next_tokens = sample(logits, k, true_vocab=self.cfg.vocab_size,
                              temperature=self.temperature)
         self._lengths[active] += 1
+        self.stats["decode_tokens"] += len(active)
         for i in active:
             req = self.slots[i]
             req.output.append(int(next_tokens[i]))
@@ -139,10 +261,87 @@ class ContinuousBatcher:
 
     def run_to_completion(self, max_steps: int = 10_000):
         steps = 0
-        while (self.queue or any(self.slots)) and steps < max_steps:
+        while self.queue or any(r is not None for r in self.slots):
+            if steps >= max_steps:
+                stuck = sorted(
+                    [r.uid for r in self.queue]
+                    + [r.uid for r in self.slots if r is not None])
+                raise RuntimeError(
+                    f"run_to_completion: max_steps={max_steps} exhausted "
+                    f"with requests still pending (uids {stuck}); raise "
+                    "max_steps or check for a wedged slot")
             self.step()
             steps += 1
         return self.completed
+
+
+class SpliceBatcher(ContinuousBatcher):
+    """Admit-time full prefill + jit'd slot splice — the pre-interleave
+    baseline.  Kept as the measured reference for `serving_bench` and the
+    parity tests; every admit stalls the whole decode batch for the full
+    prompt and double-writes its KV pages (one-sequence cache → splice).
+    """
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        max_context = self.max_context
+        self._prefill1 = jax.jit(
+            lambda p, b: self.engine.prefill(p, b, max_context))
+        self._prefill1_bucketed = jax.jit(
+            lambda p, b, n: self.engine.prefill(p, b, max_context,
+                                                prompt_len=n))
+        self._splice = jax.jit(_splice_slot, donate_argnums=(0,))
+
+    def _admit(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                # decoders idle for the whole admit: in chunk units, the
+                # interleaved scheduler would have run this many decode
+                # steps over the currently active slots
+                n_dec = sum(1 for j, r in enumerate(self.slots)
+                            if r is not None and j != i)
+                span = len(self._padded(req))
+                self.stats["decode_stall_tokens"] += n_dec * (
+                    -(-span // self.chunk_tokens))
+                self.stats["admits"] += 1
+                self._prefill_slot(i, req)
+
+    def _padded(self, req: Request) -> List[int]:
+        n = len(req.prompt)
+        if not self.bucket_prompts:
+            return req.prompt
+        Sb = bucket_length(n, hi=self.max_context - 1)
+        return req.prompt + [0] * (Sb - n)
+
+    def _prefill_slot(self, i: int, req: Request):
+        """Prefill one sequence and splice its pools/length into slot i."""
+        n = len(req.prompt)
+        toks = jnp.asarray(self._padded(req), jnp.int32)[None]
+        self._count_compile("prefill", toks.shape[1])
+        if self.bucket_prompts:
+            logits, c1 = self._prefill1_bucketed(
+                self.params, {"tokens": toks}, jnp.asarray(n, jnp.int32))
+        else:
+            logits, c1 = self._prefill1(self.params, {"tokens": toks})
+        self._count_compile("splice")
+        self.cache = self._splice(self.cache, c1,
+                                  jnp.asarray(i, jnp.int32))
+        self._lengths[i] = self._prefix + n
+        self.rng, k = jax.random.split(self.rng)
+        tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
+                         temperature=self.temperature)[0])
+        req.output.append(tok)
+
+    def step(self) -> int:
+        """One decode step over all active slots (admits prefill eagerly
+        inside `_admit`, stalling the batch)."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        decoded = self._decode_batch(active)
+        self.stats["steps"] += 1
+        return decoded
 
 
 _BATCH_AXIS0 = ("page_table_g", "page_pos_w", "lengths")

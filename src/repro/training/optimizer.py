@@ -7,7 +7,7 @@ the standard large-MoE recipe and is exposed as an EngineConfig knob.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

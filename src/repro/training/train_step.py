@@ -9,13 +9,11 @@ Two flavours:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import EngineConfig, ModelConfig
 from repro.models.transformer import Runtime, loss_fn

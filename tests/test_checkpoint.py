@@ -1,5 +1,4 @@
 """Fault-tolerance: atomic checkpoints, integrity, keep-K, async, restore."""
-import json
 import os
 
 import jax
@@ -8,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import checkpoint as ck
-from repro.training.optimizer import AdamWConfig, AdamWState, init_adamw
+from repro.training.optimizer import AdamWConfig, init_adamw
 
 
 def _state():

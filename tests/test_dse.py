@@ -1,6 +1,6 @@
 """DSE framework: heatmaps, OOM blanks, paper takeaways, engine coupling."""
 from repro.configs import get_config
-from repro.core import dse, flashsim as fs
+from repro.core import dse
 
 
 def test_heatmap_shape_and_oom_blanks():

@@ -1,7 +1,6 @@
 """Track-A flash simulator vs the paper's own numbers (§III-B, §V)."""
 import math
 
-import pytest
 
 from repro.configs import get_config
 from repro.core import flashsim as fs

@@ -1,14 +1,13 @@
 """Quantized KV pages (kv8/kv4): pack/unpack round trips, paged-attention
 parity vs the bf16 reference (ref + Pallas interpret), scale round-trip
 through the decode append paths, and engine-level prefill+decode fidelity."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, EngineConfig, get_config
+from repro.configs import EngineConfig, get_config
 from repro.core import paged_kv
 from repro.core.engine import KVNANDEngine
 from repro.core.quant import (dequantize_kv_page, kv_page_tokens_stored,

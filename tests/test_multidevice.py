@@ -227,3 +227,103 @@ assert restored["w"].sharding == sh4
 np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
 print("elastic restore OK", mesh4.shape)
 """)
+
+
+@pytest.mark.slow
+def test_sharded_chunk_fill_and_attention_match_reference():
+    """Chunked prefill on a mesh: the slot/page-ownership-guarded chunk
+    fill and the page-sharded chunk attention (combine over `model`) must
+    match the single-device chunk oracle — for bf16 and kv8 pools."""
+    run_multidevice(COMMON + """
+from repro.core import seqpar, paged_kv
+from repro.kernels.paged_attention.ref import paged_chunk_attention_ref
+
+L, B, K, NP, T, dh = 2, 4, 2, 8, 8, 16
+S, slot, layer, page0 = 16, 2, 1, 2
+kv = jax.random.normal(jax.random.PRNGKey(0), (1, S, K, dh))
+
+# --- fill: intersection of local page range x owned batch row ---------
+pool = jnp.zeros((L, B, K, NP, T, dh))
+with mesh:
+    out = jax.jit(lambda p, kv: seqpar.sharded_chunk_fill(
+        p, kv, layer, slot, page0, S, mesh,
+        batch_axes=("data",), page_axes=("model",)))(pool, kv)
+ref = paged_kv.fill_chunk_global_at(pool, kv, jnp.asarray(layer),
+                                    jnp.asarray(slot), jnp.asarray(page0),
+                                    jnp.asarray(S))
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+# quantized variant carries per-page scales
+qpool = jnp.zeros((L, B, K, NP, T, dh), jnp.int8)
+qscale = jnp.zeros((L, B, K, NP), jnp.float32)
+with mesh:
+    qo, so = jax.jit(lambda p, s, kv: seqpar.sharded_chunk_fill(
+        p, kv, layer, slot, page0, S, mesh, batch_axes=("data",),
+        page_axes=("model",), scale=s, kv_quant="kv8"))(qpool, qscale, kv)
+qr, sr = paged_kv.fill_chunk_global_at(
+    qpool, kv, jnp.asarray(layer), jnp.asarray(slot), jnp.asarray(page0),
+    jnp.asarray(S), scale=qscale, kv_quant="kv8")
+# sharded vs single-device reduce order can differ by 1 ULP in the page
+# amax -> scales to ~1e-7 rtol, codes to at most one rounding tie
+assert int(jnp.abs(qo.astype(jnp.int32) - qr.astype(jnp.int32)).max()) <= 1
+np.testing.assert_allclose(np.asarray(so), np.asarray(sr), rtol=1e-6)
+
+# --- past-context chunk attention: partials combined over pages -------
+H, G = 6, 3
+ks = jax.random.split(jax.random.PRNGKey(1), 3)
+kp = jax.random.normal(ks[0], (1, K, NP, T, dh))
+vp = jax.random.normal(ks[1], (1, K, NP, T, dh))
+q = jax.random.normal(ks[2], (1, 12, H, dh))
+base = (jnp.arange(NP, dtype=jnp.int32) * T)[None]
+start = jnp.asarray(40, jnp.int32)
+q_pos = 40 + jnp.arange(12, dtype=jnp.int32)
+with mesh:
+    o_sh, m_sh, l_sh = jax.jit(lambda *a: seqpar.sharded_chunk_attention(
+        *a, mesh, page_axes=("model",)))(q, kp, vp, base, start, q_pos)
+o_rf, m_rf, l_rf = paged_chunk_attention_ref(q, kp, vp, base, start, q_pos)
+np.testing.assert_allclose(np.asarray(o_sh), np.asarray(o_rf),
+                           atol=3e-5, rtol=3e-5)
+np.testing.assert_allclose(np.asarray(l_sh), np.asarray(l_rf),
+                           atol=3e-5, rtol=3e-5)
+print("sharded chunk fill + attention OK")
+""")
+
+
+@pytest.mark.slow
+def test_engine_prefill_chunk_sharded_matches_single_device():
+    """prefill_chunk on a mesh (global-pool arch): sharded chunk fills +
+    sharded past partials reproduce the single-device chunk path."""
+    run_multidevice(COMMON + """
+from repro.configs import get_config, EngineConfig
+from repro.models.registry import Model
+from repro.models.transformer import Runtime
+from repro.core.engine import KVNANDEngine
+cfg = get_config("qwen2.5-32b").reduced()
+rt = Runtime()
+m = Model(cfg, rt)
+params = m.init(jax.random.PRNGKey(0))
+n, C, ctx = 24, 16, 32
+toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 1,
+                          cfg.vocab_size, jnp.int32)
+def chunked(engine, cache, use_jit):
+    lg = None
+    for c0 in range(0, 32, C):
+        cl = min(C, n - c0)
+        fn = lambda p, c, t, s, st, nn: engine.prefill_chunk(
+            p, c, {"tokens": t}, s, st, nn, first=(c0 == 0))
+        if use_jit:
+            fn = jax.jit(fn)
+        lg, cache = fn(params, cache, toks[:, c0:c0 + C], 2,
+                       jnp.asarray(c0, jnp.int32), jnp.asarray(cl, jnp.int32))
+    return lg, cache
+eng1 = KVNANDEngine(cfg, EngineConfig(page_tokens=4, kv_dtype="float32",
+                                      uniform_lengths=False), rt)
+lg1, _ = chunked(eng1, eng1.init_cache(4, ctx), False)
+engN = KVNANDEngine(cfg, EngineConfig(page_tokens=4, kv_dtype="float32",
+                                      uniform_lengths=False), rt, mesh=mesh)
+with mesh:
+    lgN, _ = chunked(engN, engN.init_cache(4, ctx), True)
+np.testing.assert_allclose(np.asarray(lg1), np.asarray(lgN),
+                           atol=5e-4, rtol=5e-4)
+print("sharded prefill_chunk == single device OK")
+""", timeout=900)

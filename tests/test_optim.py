@@ -1,5 +1,4 @@
 """AdamW vs a literal numpy reference; clipping; schedule; bf16 moments."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

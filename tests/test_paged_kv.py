@@ -3,7 +3,6 @@ property tests over the page-mapping invariants (paper §IV-D)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs import EngineConfig, get_config

@@ -1,6 +1,7 @@
 """Continuous-batching scheduler: jitted slot splice (vs the old eager
-full-pool copy), power-of-two prompt bucketing, and end-to-end decode
-equivalence across both repairs."""
+full-pool copy), power-of-two prompt bucketing, end-to-end decode
+equivalence across both repairs, and the admission hardening (capacity
+rejection, bucket clamp, stuck-drain diagnostics)."""
 import dataclasses
 
 import jax
@@ -12,8 +13,8 @@ from repro.configs import EngineConfig, get_config
 from repro.models.registry import Model
 from repro.models.transformer import Runtime
 from repro.serving.scheduler import (ContinuousBatcher, Request,
-                                     bucket_length, _splice_slot,
-                                     _splice_slot_ref)
+                                     SpliceBatcher, bucket_length,
+                                     _splice_slot, _splice_slot_ref)
 
 ARCH = "qwen1.5-0.5b"
 
@@ -30,6 +31,28 @@ def test_bucket_length():
     assert bucket_length(16) == 16
     assert bucket_length(17) == 32
     assert bucket_length(100) == 128
+    # near-capacity prompts must not round past the slot stripe
+    assert bucket_length(100, hi=120) == 120
+    assert bucket_length(100, hi=128) == 128
+
+
+def test_submit_rejects_oversized_and_empty_prompts():
+    cfg, rt, params = _model()
+    b = ContinuousBatcher(cfg, params, batch_slots=2, max_context=64)
+    b.submit(Request(0, list(range(1, 64)), max_new=1))    # 63 == capacity
+    with pytest.raises(ValueError, match="exceeds the slot capacity"):
+        b.submit(Request(1, list(range(1, 65)), max_new=1))  # 64 > capacity
+    with pytest.raises(ValueError, match="empty prompt"):
+        b.submit(Request(2, [], max_new=1))
+
+
+def test_run_to_completion_raises_on_exhausted_steps():
+    cfg, rt, params = _model()
+    b = ContinuousBatcher(cfg, params, batch_slots=1, max_context=64)
+    b.submit(Request(7, [1, 2, 3], max_new=8))
+    b.submit(Request(9, [4, 5], max_new=8))
+    with pytest.raises(RuntimeError, match=r"uids \[7, 9\]"):
+        b.run_to_completion(max_steps=1)
 
 
 def test_jitted_splice_identical_to_eager():
@@ -68,9 +91,11 @@ def test_jitted_splice_is_single_dynamic_update_per_leaf():
 
 
 def _run(cfg, params, prompts, *, bucket, max_new=5, slots=2, ctx=96,
-         eng=None):
-    b = ContinuousBatcher(cfg, params, batch_slots=slots, max_context=ctx,
-                          temperature=0.0, bucket_prompts=bucket, eng=eng)
+         eng=None, cls=SpliceBatcher):
+    """Bucketing lives in the splice path (the interleaved scheduler uses
+    the chunk grid instead), so the bucket-parity tests run SpliceBatcher."""
+    b = cls(cfg, params, batch_slots=slots, max_context=ctx,
+            temperature=0.0, bucket_prompts=bucket, eng=eng)
     for uid, p in enumerate(prompts):
         b.submit(Request(uid, list(p), max_new=max_new))
     done = b.run_to_completion()
