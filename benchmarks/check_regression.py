@@ -1,13 +1,20 @@
 """Bench-regression gate for the CI `bench` job.
 
-`benchmarks/run.py` APPENDS the current run's kernel rows to the committed
-``BENCH_kernels.json`` trajectory; this script compares that freshest run
-against the per-entry MEDIAN of the committed trajectory and fails
-(exit 1) if any kernel entry's ``us_per_call`` regressed by more than
+`benchmarks/run.py` APPENDS the current run's rows to the committed
+trajectory artifacts (``BENCH_kernels.json`` and ``BENCH_serving.json``);
+this script compares each freshest run against the per-entry MEDIAN of
+its committed trajectory and fails (exit 1) on a regression of more than
 ``--threshold`` (default 20%).
 
   python benchmarks/run.py            # appends the current run
   python benchmarks/check_regression.py
+
+Kernel entries gate on ``us_per_call`` directly.  Serving entries gate
+only the trajectory metrics that measure scheduler QUALITY — end-to-end
+``wall`` and ``steps_to_drain`` — so the PR 2 interleaving wins (and the
+shared-pool admission wins on top) stay protected; counter rows
+(compiles, stall/hit/utilization diagnostics) are informational and
+never fail the build.
 
 Entries faster than ``--min-us`` in the baseline are skipped (CI-runner
 timer noise dominates sub-50µs calls); entries that appear or disappear
@@ -26,8 +33,18 @@ import pathlib
 import statistics
 import sys
 
-DEFAULT_PATH = pathlib.Path(__file__).resolve().parent.parent \
-    / "BENCH_kernels.json"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_PATH = REPO_ROOT / "BENCH_kernels.json"
+SERVING_PATH = REPO_ROOT / "BENCH_serving.json"
+
+# serving rows gated on their trajectory value; everything else in the
+# serving artifact is a diagnostic counter
+SERVING_GATED_SUFFIXES = ("/wall", "/steps_to_drain")
+
+
+def _gated_serving_rows(rows):
+    return [r for r in rows
+            if r["name"].endswith(SERVING_GATED_SUFFIXES)]
 
 
 def trajectory_baseline(runs):
@@ -63,36 +80,55 @@ def compare(baseline_rows, current_rows, threshold: float, min_us: float):
     return regressions, notes
 
 
+def check_artifact(path: pathlib.Path, threshold: float, min_us: float,
+                   row_filter=None) -> int:
+    """Gate one trajectory artifact; returns the regression count."""
+    tag = f"[check_regression:{path.name}]"
+    if not path.exists():
+        print(f"{tag} missing — nothing to gate")
+        return 0
+    runs = json.loads(path.read_text())
+    if len(runs) < 2:
+        print(f"{tag} only {len(runs)} run(s) in trajectory — need a "
+              "committed baseline plus the current run; passing")
+        return 0
+    current = runs[-1]
+    baseline_rows = trajectory_baseline(runs[:-1])
+    cur_rows = current["rows"]
+    if row_filter is not None:
+        baseline_rows = row_filter(baseline_rows)
+        cur_rows = row_filter(cur_rows)
+    regressions, notes = compare(baseline_rows, cur_rows,
+                                 threshold, min_us)
+    for n in notes:
+        print(f"{tag} note: {n}")
+    print(f"{tag} trajectory median of {len(runs) - 1} committed run(s) "
+          f"vs current {current['timestamp']}: {len(regressions)} "
+          f"regression(s) at >{threshold:.0%}")
+    for name, old, new in regressions:
+        print(f"  REGRESSED {name}: {old:.1f} -> {new:.1f} "
+              f"({new / old - 1.0:+.1%})")
+    return len(regressions)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", type=pathlib.Path, default=DEFAULT_PATH)
+    ap.add_argument("--serving-path", type=pathlib.Path,
+                    default=SERVING_PATH)
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="fractional slowdown that fails the build")
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="skip entries whose baseline is below this")
     args = ap.parse_args(argv)
 
-    if not args.path.exists():
-        print(f"[check_regression] {args.path} missing — nothing to gate")
-        return 0
-    runs = json.loads(args.path.read_text())
-    if len(runs) < 2:
-        print(f"[check_regression] only {len(runs)} run(s) in trajectory — "
-              "need a committed baseline plus the current run; passing")
-        return 0
-    current = runs[-1]
-    baseline_rows = trajectory_baseline(runs[:-1])
-    regressions, notes = compare(baseline_rows, current["rows"],
-                                 args.threshold, args.min_us)
-    for n in notes:
-        print(f"[check_regression] note: {n}")
-    print(f"[check_regression] trajectory median of {len(runs) - 1} "
-          f"committed run(s) vs current {current['timestamp']}: "
-          f"{len(regressions)} regression(s) at >{args.threshold:.0%}")
-    for name, old, new in regressions:
-        print(f"  REGRESSED {name}: {old:.1f}us -> {new:.1f}us "
-              f"({new / old - 1.0:+.1%})")
-    return 1 if regressions else 0
+    n_bad = check_artifact(args.path, args.threshold, args.min_us)
+    # serving rows gate WITHOUT the µs noise floor: steps_to_drain is a
+    # deterministic step count, and the wall rows are whole-trace drains
+    # (seconds — far above any timer noise a floor would need to absorb)
+    n_bad += check_artifact(args.serving_path, args.threshold, 0.0,
+                            row_filter=_gated_serving_rows)
+    return 1 if n_bad else 0
 
 
 if __name__ == "__main__":

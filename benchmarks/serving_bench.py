@@ -1,20 +1,29 @@
 """Serving-scheduler benchmark: interleaved chunked prefill vs the splice
-baseline under mixed prefill/decode traffic.
+baseline, plus the shared-pool allocator (FTL-mapped paged KV, §IV-D).
 
-Runs the same request trace through both schedulers on the reduced config
-and emits, per scheduler:
+Runs the same request trace through three schedulers on the reduced
+config and emits, per scheduler:
 
   serving/<mode>/wall                 end-to-end µs (derived: tok/s)
   serving/<mode>/steps_to_drain       scheduler steps to drain the trace
   serving/<mode>/compiles             distinct jit signatures compiled
   serving/<mode>/decode_stall_per_admit
         decode tokens NOT generated while an admit monopolized the engine
-        (chunk-granular: decoders idle × chunks of prefill work).  The
-        interleaved scheduler shares every step between one prefill chunk
-        and the whole decode batch, so its stall is 0 by construction —
-        the acceptance metric for the chunked-prefill tentpole.
+        (0 by construction for the interleaved schedulers).
 
-Counter rows carry the count in `us_per_call` (the harness's one numeric
+Shared-pool trajectory metrics (the allocator's capacity win):
+
+  serving/shared/pool_util            peak live pages / pool pages
+  serving/shared_prefix/prefix_hit_rate
+        prompt pages served from the radix prefix cache on a
+        shared-system-prompt trace (> 0 == prefix sharing works)
+  serving/shared_capacity/stripe_overcommit
+        summed per-slot stripe pages of the admitted mix / pool pages —
+        > 1 means the mix could NOT have been admitted under the old
+        per-slot stripe layout, yet the pooled allocator drains it.
+
+`wall` and `steps_to_drain` rows are gated by check_regression.py;
+counter rows carry the count in `us_per_call` (the harness's one numeric
 column) with the unit spelled out in `derived`.
 """
 import time
@@ -30,6 +39,7 @@ MAX_CONTEXT = 128
 CHUNK = 32
 MAX_NEW = 8
 N_REQUESTS = 8
+PAGE_TOKENS = 16
 
 
 def _trace(vocab):
@@ -38,10 +48,19 @@ def _trace(vocab):
             for n in rng.integers(5, 45, N_REQUESTS)]
 
 
-def _drain(cls, cfg, params, eng, prompts):
+def _prefix_trace(vocab):
+    """Shared 32-token system prompt + unique tails, incl. one repeat."""
+    rng = np.random.default_rng(11)
+    sysp = rng.integers(1, vocab, 32).tolist()
+    tails = [rng.integers(1, vocab, 9).tolist() for _ in range(5)]
+    return [sysp + t for t in tails] + [sysp + tails[0]]
+
+
+def _drain(cls, cfg, params, eng, prompts, *, slots=SLOTS,
+           max_context=MAX_CONTEXT):
     from repro.serving.scheduler import Request
 
-    b = cls(cfg, params, batch_slots=SLOTS, max_context=MAX_CONTEXT,
+    b = cls(cfg, params, batch_slots=slots, max_context=max_context,
             temperature=0.0, eng=eng, prefill_chunk_tokens=CHUNK)
     for uid, p in enumerate(prompts):
         b.submit(Request(uid, list(p), max_new=MAX_NEW))
@@ -60,12 +79,15 @@ def run():
 
     cfg = get_config(ARCH).reduced()
     params = Model(cfg, Runtime()).init(jax.random.PRNGKey(0))
-    eng = EngineConfig(page_tokens=16, uniform_lengths=False)
+    stripe = EngineConfig(page_tokens=PAGE_TOKENS, uniform_lengths=False)
+    shared = EngineConfig(page_tokens=PAGE_TOKENS, uniform_lengths=False,
+                          shared_pool=True)
     prompts = _trace(cfg.vocab_size)
 
     outs = {}
-    for mode, cls in (("splice", SpliceBatcher),
-                      ("interleaved", ContinuousBatcher)):
+    for mode, cls, eng in (("splice", SpliceBatcher, stripe),
+                           ("interleaved", ContinuousBatcher, stripe),
+                           ("shared", ContinuousBatcher, shared)):
         dt, total, st, outs[mode] = _drain(cls, cfg, params, eng, prompts)
         stall = st["decode_stall_tokens"] / max(st["admits"], 1)
         emit(f"serving/{mode}/wall", dt * 1e6,
@@ -77,9 +99,47 @@ def run():
         emit(f"serving/{mode}/decode_stall_per_admit", stall,
              f"decode tokens stalled per admit "
              f"({st['decode_stall_tokens']} over {st['admits']} admits)")
-    if outs["splice"] != outs["interleaved"]:
-        raise AssertionError(
-            "interleaved scheduler diverged from the splice baseline")
+        if mode == "shared":
+            util = st["pool_peak_pages"] / max(st["pool_total_pages"], 1)
+            emit("serving/shared/pool_util", util * 100.0,
+                 f"% peak: {st['pool_peak_pages']} of "
+                 f"{st['pool_total_pages']} pool pages live")
+    for mode in ("interleaved", "shared"):
+        if outs[mode] != outs["splice"]:
+            raise AssertionError(
+                f"{mode} scheduler diverged from the splice baseline")
+
+    # prefix sharing: shared system prompt -> cached pages served
+    pprompts = _prefix_trace(cfg.vocab_size)
+    _, _, st_ref, o_ref = _drain(ContinuousBatcher, cfg, params, stripe,
+                                 pprompts)
+    dt, total, st, o_shared = _drain(ContinuousBatcher, cfg, params,
+                                     shared, pprompts)
+    if o_shared != o_ref:
+        raise AssertionError("prefix-cache outputs diverged from stripe")
+    hit_rate = st["prefix_hit_pages"] / max(st["prompt_pages"], 1)
+    emit("serving/shared_prefix/prefix_hit_rate", hit_rate * 100.0,
+         f"% of prompt pages served from cache "
+         f"({st['prefix_hit_pages']}/{st['prompt_pages']}; "
+         f"{st['cow_copies']} COW copies)")
+
+    # capacity-proportional admission: 6 slots whose per-slot stripes
+    # (6 × NPg pages) cannot fit the 16-page pool, yet the actual mix can
+    cap_eng = EngineConfig(page_tokens=PAGE_TOKENS, uniform_lengths=False,
+                           shared_pool=True, total_pages=16)
+    rng = np.random.default_rng(13)
+    cap_prompts = [rng.integers(1, cfg.vocab_size, 11).tolist()
+                   for _ in range(6)]
+    dt, total, st, o_cap = _drain(ContinuousBatcher, cfg, params, cap_eng,
+                                  cap_prompts, slots=6)
+    if len(o_cap) != len(cap_prompts):
+        raise AssertionError("capacity mix did not drain")
+    npg = -(-MAX_CONTEXT // PAGE_TOKENS)
+    overcommit = 6 * npg / st["pool_total_pages"]
+    emit("serving/shared_capacity/stripe_overcommit", overcommit,
+         f"x: {6 * npg} stripe pages admitted through a "
+         f"{st['pool_total_pages']}-page pool "
+         f"(peak {st['pool_peak_pages']} live)")
 
 
 if __name__ == "__main__":

@@ -233,6 +233,12 @@ class EngineConfig:
     kv_quant: str = "none"          # "none" | "kv8" | "kv4" paged-KV format
     max_pages_per_seq: int = 0      # 0 -> derived from context length
     kv_dtype: str = "bfloat16"      # KV cache storage dtype (kv_quant=none)
+    # shared-pool paged KV (§IV-D FTL mapping): one physical page pool per
+    # layer-group, addressed through per-slot page tables, instead of a
+    # private per-slot stripe of ceil(max_context / page_tokens) pages
+    shared_pool: bool = False
+    total_pages: int = 0            # global-pool physical pages (0 -> B·NPg)
+    total_pages_w: int = 0          # window-pool physical pages (0 -> B·NPw)
     uniform_lengths: bool = True    # static batching: lockstep appends
     attn_impl: str = "auto"         # "auto" | "pallas" | "ref" | "interpret"
     gemv_impl: str = "auto"

@@ -27,6 +27,8 @@ class DSEPoint:
     latency: float            # s/token; inf = OOM
     oom: bool
     kv_bits: int = 0          # stored KV page format (0 -> abits)
+    capacity: int = 0         # concurrent seq-length contexts (pooled
+                              # page allocation, §IV-D — Track-B admission)
 
 
 # Track-B paged-KV formats as a DSE axis (0 = keep abits-wide KV, the
@@ -55,7 +57,8 @@ def sweep(cfg: ModelConfig, seqs, total_dies: int = 8, wbits: int = 4,
             points.append(DSEPoint(
                 sys.name, sys.weight_dies,
                 sys.kv_dies if sys.kind == "kvnand-d" else 0,
-                wbits, abits, seq, lat, oom, kv_bits))
+                wbits, abits, seq, lat, oom, kv_bits,
+                capacity=fs.pooled_capacity(sys, cfg, seq)))
     return points
 
 

@@ -155,16 +155,29 @@ class KVNANDEngine:
     # paged attention dispatch (single device vs sharded combine)
     # ------------------------------------------------------------------
     def _paged_attn(self, q, kp, vp, base, length, plan: ShardPlan,
-                    pool: str, window, ks=None, vs=None):
-        """ks/vs: per-page×head dequant scales (None -> bf16 pool)."""
+                    pool: str, window, ks=None, vs=None, table=None):
+        """ks/vs: per-page×head dequant scales (None -> bf16 pool).
+
+        kp/vp with a batch dim ([B, K, NP, T, dh]) read the slot's private
+        stripe; 4-D pools ([K, P_total, T, dh]) are the SHARED pool and
+        `table` [B, NP] supplies the logical→physical walk.
+        """
         kv_quant = self.eng.kv_quant if ks is not None else "none"
         page_axes = plan.page_axes_g if pool == "g" else plan.page_axes_w
+        shared = kp.ndim == 4
         if self.mesh is None or self.mesh.size == 1 or not page_axes:
             o, _, _ = paged_attention_partial(
                 q, kp, vp, base, length, window=window,
                 impl=self.eng.attn_impl, kv_quant=kv_quant,
-                k_scale=ks, v_scale=vs)
+                k_scale=ks, v_scale=vs,
+                page_table=table if shared else None)
             return o
+        if shared:
+            return seqpar.paged_decode_attention_sharded_shared(
+                q, kp, vp, table, base, length, self.mesh, window=window,
+                batch_axes=plan.batch_axes, page_axes=page_axes,
+                impl=self.eng.attn_impl, kv_quant=kv_quant,
+                k_scale=ks, v_scale=vs)
         return seqpar.paged_decode_attention_sharded(
             q, kp, vp, base, length, self.mesh, window=window,
             batch_axes=plan.batch_axes, page_axes=page_axes,
@@ -202,35 +215,37 @@ class KVNANDEngine:
     # per-layer attention (compact vs discrete)
     # ------------------------------------------------------------------
     def _attend_compact(self, pl_, x_norm, kp, vp, ks, vs, base, lengths,
-                        plan, pool, window):
+                        plan, pool, window, table=None):
         """Fused QKV gen + attention (KVNAND-C, Fig 10b).  kp/vp are the
         already-appended layer slices (+scales when the pool is quantized)."""
         q, _, _ = attn_mod.project_qkv(pl_["attn"], self.cfg, x_norm,
                                        lengths[:, None])
         return self._paged_attn(q[:, 0], kp, vp, base, lengths + 1, plan,
-                                pool, window, ks, vs)
+                                pool, window, ks, vs, table)
 
     def _attend_discrete(self, pl_, x_norm, kp, vp, ks, vs, base, lengths,
-                         plan, pool, window):
+                         plan, pool, window, table=None):
         """Head-group pipelined attention (KVNAND-D, Fig 10a): q-GEMV of
         group i+1 is independent of group i's attention -> overlapped."""
         cfg = self.cfg
         B = x_norm.shape[0]
         K = cfg.n_kv_heads
         x_tok = x_norm[:, 0]
+        k_axis = 0 if kp.ndim == 4 else 1   # shared pools are [K, P, T, dh]
 
         def body(q_cur, i):
             q_next = attn_mod.project_q_group(
                 pl_["attn"], cfg, x_tok, jnp.minimum(i + 1, K - 1), lengths)
             # slice head group i on the K dim directly (no pool transpose)
-            kp_i = jax.lax.dynamic_slice_in_dim(kp, i, 1, 1)
-            vp_i = jax.lax.dynamic_slice_in_dim(vp, i, 1, 1)
+            kp_i = jax.lax.dynamic_slice_in_dim(kp, i, 1, k_axis)
+            vp_i = jax.lax.dynamic_slice_in_dim(vp, i, 1, k_axis)
             ks_i = vs_i = None
             if ks is not None:
-                ks_i = jax.lax.dynamic_slice_in_dim(ks, i, 1, 1)
-                vs_i = jax.lax.dynamic_slice_in_dim(vs, i, 1, 1)
+                ks_i = jax.lax.dynamic_slice_in_dim(ks, i, 1, k_axis)
+                vs_i = jax.lax.dynamic_slice_in_dim(vs, i, 1, k_axis)
             o = self._paged_attn(q_cur, kp_i, vp_i, base, lengths + 1,
-                                 plan, pool, window, ks_i, vs_i)  # [B, G, dh]
+                                 plan, pool, window, ks_i, vs_i,
+                                 table)  # [B, G, dh]
             return q_next, o
 
         q0 = attn_mod.project_q_group(pl_["attn"], cfg, x_tok,
@@ -245,6 +260,7 @@ class KVNANDEngine:
     def _decode_attn_layer(self, pl_, x, pools, g_idx, w_idx, lengths,
                            plan, is_glob):
         cfg = self.cfg
+        shared = self.eng.shared_pool
         h = rms_norm(x, pl_["ln1"], cfg.norm_eps)
         use_window = (cfg.window is not None) and not is_glob
         # K/V for the new token (the paper's ❸→❹ write into G2/own pages)
@@ -255,28 +271,50 @@ class KVNANDEngine:
         slot = lengths % T
         if use_window:
             kname, vname, idx = "k_pages_w", "v_pages_w", w_idx
-            NP = pools[kname].shape[3]
-            phys = (lengths // T) % NP
+            if shared:
+                NPw = self._table_w.shape[1]
+                ring = (lengths // T) % NPw
+                phys = jnp.take_along_axis(self._table_w, ring[:, None],
+                                           axis=1)[:, 0]
+                table, drop = self._table_w, pools[kname].shape[2]
+            else:
+                NP = pools[kname].shape[3]
+                phys = (lengths // T) % NP
+                table, drop = None, NP
             base, window = self._page_pos_w_new, cfg.window
         else:
             kname, vname, idx = "k_pages_g", "v_pages_g", g_idx
-            NP = pools[kname].shape[3]
             logical = lengths // T
             phys = jnp.take_along_axis(self._table, logical[:, None],
                                        axis=1)[:, 0]
+            table = self._table if shared else None
+            drop = pools[kname].shape[2 if shared else 3]
             base, window = self._base_g, None
         if self._active is not None:
             # interleaved scheduler: slots mid-prefill (or empty) must not
             # append — redirect their page index out of range so the
             # mode="drop" scatter discards the write
-            phys = jnp.where(self._active, phys, NP)
+            phys = jnp.where(self._active, phys, drop)
         page_axes = (plan.page_axes_w if use_window else plan.page_axes_g)
         sharded = (self.mesh is not None and self.mesh.size > 1
                    and bool(page_axes))
         fmt = self.eng.kv_quant
         ksname = "k_scale_w" if use_window else "k_scale_g"
         vsname = "v_scale_w" if use_window else "v_scale_g"
-        if sharded and self.eng.uniform_lengths:
+        if sharded and shared:
+            # shared pool sharded over P_total: the owning shard translates
+            # the global physical index to its local range and scatters
+            out = seqpar.sharded_append_shared(
+                pools[kname], pools[vname], idx, k1, v1, phys, slot,
+                self.mesh, batch_axes=plan.batch_axes, page_axes=page_axes,
+                k_scale=pools.get(ksname), v_scale=pools.get(vsname),
+                kv_quant=fmt)
+            if fmt != "none":
+                (pools[kname], pools[vname], pools[ksname],
+                 pools[vsname]) = out
+            else:
+                pools[kname], pools[vname] = out
+        elif sharded and self.eng.uniform_lengths:
             # append INSIDE the owning shard (paper: direct G2-die write);
             # a pjit-level update on the sharded page dim lowers to a
             # full-pool ownership select per layer (§Perf iteration 2)
@@ -294,13 +332,21 @@ class KVNANDEngine:
                     page_axes=page_axes)
         elif fmt != "none":
             # page-granular requantizing append (tentpole write path)
-            append = (paged_kv.append_token_quant_uniform
-                      if self.eng.uniform_lengths
-                      else paged_kv.append_token_quant)
+            if shared:
+                append = paged_kv.append_token_quant_shared
+            else:
+                append = (paged_kv.append_token_quant_uniform
+                          if self.eng.uniform_lengths
+                          else paged_kv.append_token_quant)
             pools[kname], pools[ksname] = append(
                 pools[kname], pools[ksname], idx, phys, slot, k1, fmt)
             pools[vname], pools[vsname] = append(
                 pools[vname], pools[vsname], idx, phys, slot, v1, fmt)
+        elif shared:
+            pools[kname] = paged_kv.append_global_shared(
+                pools[kname], idx, phys, slot, k1)
+            pools[vname] = paged_kv.append_global_shared(
+                pools[vname], idx, phys, slot, v1)
         else:
             pools[kname] = self._append_token(pools[kname], idx, phys, slot,
                                               k1)
@@ -317,7 +363,7 @@ class KVNANDEngine:
                   if self.eng.variant == "discrete" or self.eng.hg_pipeline
                   else self._attend_compact)
         o = attend(pl_, h, kp, vp, ks, vs, base, lengths, plan,
-                   "w" if use_window else "g", window)
+                   "w" if use_window else "g", window, table)
         aout = attn_mod.project_out(pl_["attn"], cfg, o[:, None])
         return h, aout, pools
 
@@ -441,18 +487,26 @@ class KVNANDEngine:
         self._active = active
         B = tokens.shape[0]
         lengths = cache.lengths
-        NPg = (cache.k_pages_g.shape[3]
-               if cache.k_pages_g is not None else 1)
-        plan = plan_sharding(self.mesh, B, NPg)
+        shared = self.eng.shared_pool
+        plan = plan_sharding(
+            self.mesh, B, paged_kv.pool_page_count(cache.k_pages_g, shared))
 
         # shared per-step page bookkeeping (identical for every layer)
         self._table = cache.page_table_g
+        self._table_w = cache.page_table_w
         if cache.page_table_g is not None:
             T = self.eng.page_tokens
             NP = cache.page_table_g.shape[1]
-            self._base_g = jnp.zeros((B, NP), jnp.int32).at[
-                jnp.arange(B)[:, None], cache.page_table_g].set(
-                jnp.arange(NP, dtype=jnp.int32)[None] * T)
+            if shared:
+                # attention walks LOGICAL pages through the table, so the
+                # base of logical page j is simply j·T; pages past `lengths`
+                # (unallocated table entries) are data-invalid already
+                self._base_g = jnp.broadcast_to(
+                    (jnp.arange(NP, dtype=jnp.int32) * T)[None], (B, NP))
+            else:
+                self._base_g = jnp.zeros((B, NP), jnp.int32).at[
+                    jnp.arange(B)[:, None], cache.page_table_g].set(
+                    jnp.arange(NP, dtype=jnp.int32)[None] * T)
         else:
             self._base_g = None
         if cache.page_pos_w is not None:
@@ -559,9 +613,18 @@ class KVNANDEngine:
             enc_len = enc_out.shape[1]
 
         cache = self.init_cache(B, max(max_context, S + 1), enc_len=enc_len)
-        NPg = (cache.k_pages_g.shape[3]
-               if cache.k_pages_g is not None else 1)
-        self._prefill_plan = plan_sharding(self.mesh, B, NPg)
+        shared = self.eng.shared_pool
+        if shared and self.mesh is not None and self.mesh.size > 1:
+            raise NotImplementedError(
+                "sharded one-shot prefill into a shared pool is not wired; "
+                "shared-pool serving prefills via prefill_chunk (the mesh "
+                "path covers decode and chunk attention)")
+        # prefill writes through the (identity-striped) tables; they are
+        # read-only during the layer scan so they ride as closure constants
+        self._prefill_tables = {"g": cache.page_table_g,
+                                "w": cache.page_table_w}
+        self._prefill_plan = plan_sharding(
+            self.mesh, B, paged_kv.pool_page_count(cache.k_pages_g, shared))
         n_groups = cfg.n_layers // self.period
         grouped_params = jax.tree.map(
             lambda a: a.reshape((n_groups, self.period) + a.shape[1:]),
@@ -638,59 +701,35 @@ class KVNANDEngine:
         sharded = self.mesh is not None and self.mesh.size > 1
         fmt = self.eng.kv_quant
 
-        def fill_pair(suffix, fill):
-            """Apply `fill(pool, kv[, scale])` to the K then V pool;
-            quantized fills return (pool, scale)."""
-            for prefix, kv_seq in (("k", k), ("v", v)):
-                name = f"{prefix}_pages_{suffix}"
-                sname = f"{prefix}_scale_{suffix}"
-                if fmt != "none":
-                    pools[name], pools[sname] = fill(pools[name], kv_seq,
-                                                     pools[sname])
-                else:
-                    pools[name] = fill(pools[name], kv_seq, None)
-
-        if use_window:
-            if sharded and plan.page_axes_w:
-                def fill(pool, kv_seq, scale):
-                    return seqpar.sharded_window_fill(
-                        pool, kv_seq, w_idx, mesh=self.mesh,
-                        batch_axes=plan.batch_axes,
-                        page_axes=plan.page_axes_w, scale=scale,
-                        kv_quant=fmt)
-            elif self._true_S is not None:
-                # bucketed prompt: walk only REAL source pages of the ring
-                def fill(pool, kv_seq, scale):
-                    return paged_kv.fill_window_at_dyn(
-                        pool, kv_seq, w_idx, self._true_S, scale=scale,
-                        kv_quant=fmt)
-            elif fmt != "none":
-                def fill(pool, kv_seq, scale):
-                    return paged_kv.fill_window_at_quant(pool, scale,
-                                                         kv_seq, w_idx, fmt)
+        # ONE fill path for every arch/format/layout: the one-shot fill is
+        # `prefill_chunk`'s whole-prompt chunk write (`paged_kv.fill_layer`
+        # — bit-identical pages, see the chunk parity tests); only the
+        # mesh-sharded stripe fills keep their shard-local writers.
+        # Global-pool bucket padding needs no valid-length guard — padded
+        # pages land after the true length and stay masked by `lengths`.
+        suffix = "w" if use_window else "g"
+        idx = w_idx if use_window else g_idx
+        page_axes = plan.page_axes_w if use_window else plan.page_axes_g
+        for prefix, kv_seq in (("k", k), ("v", v)):
+            name = f"{prefix}_pages_{suffix}"
+            sname = f"{prefix}_scale_{suffix}"
+            if sharded and page_axes:
+                sfill = (seqpar.sharded_window_fill if use_window
+                         else seqpar.sharded_prefill_fill)
+                out = sfill(pools[name], kv_seq, idx, mesh=self.mesh,
+                            batch_axes=plan.batch_axes, page_axes=page_axes,
+                            scale=pools.get(sname), kv_quant=fmt)
             else:
-                def fill(pool, kv_seq, scale):
-                    return paged_kv.fill_window_at(pool, kv_seq, w_idx)
-            fill_pair("w", fill)
-        else:
-            # global pool: bucket padding needs no dyn fill — padded pages
-            # land after the true length and stay masked by `lengths`
-            if sharded and plan.page_axes_g:
-                def fill(pool, kv_seq, scale):
-                    return seqpar.sharded_prefill_fill(
-                        pool, kv_seq, g_idx, mesh=self.mesh,
-                        batch_axes=plan.batch_axes,
-                        page_axes=plan.page_axes_g, scale=scale,
-                        kv_quant=fmt)
-            elif fmt != "none":
-                def fill(pool, kv_seq, scale):
-                    return paged_kv.fill_prefill_at_quant(pool, scale,
-                                                          kv_seq, g_idx,
-                                                          fmt)
+                out = paged_kv.fill_layer(
+                    pools[name], kv_seq, idx, ring=use_window,
+                    true_len=self._true_S if use_window else None,
+                    table=self._prefill_tables[suffix]
+                    if self.eng.shared_pool else None,
+                    scale=pools.get(sname), kv_quant=fmt)
+            if fmt != "none":
+                pools[name], pools[sname] = out
             else:
-                def fill(pool, kv_seq, scale):
-                    return paged_kv.fill_prefill_at(pool, kv_seq, g_idx)
-            fill_pair("g", fill)
+                pools[name] = out
 
         if cfg.family == "hybrid":
             state0 = jnp.zeros(states["ssm_state"].shape[1:], jnp.float32)
@@ -797,6 +836,12 @@ class KVNANDEngine:
             raise NotImplementedError(
                 "sharded chunked prefill covers global-pool attention "
                 "archs; window-ring / recurrent archs are single-host")
+        shared = self.eng.shared_pool
+        if mesh_on and shared:
+            raise NotImplementedError(
+                "sharded chunked prefill into a shared pool is not wired "
+                "(the mesh path covers shared-pool decode); run the "
+                "scheduler single-host or use the stripe layout on a mesh")
         slot = jnp.asarray(slot, jnp.int32)
         start = jnp.asarray(start, jnp.int32)
         chunk_len = jnp.asarray(chunk_len, jnp.int32)
@@ -816,26 +861,37 @@ class KVNANDEngine:
         page0 = start // T
 
         B = cache.lengths.shape[0]
-        NPg = (cache.k_pages_g.shape[3]
-               if cache.k_pages_g is not None else 1)
-        plan = plan_sharding(self.mesh, B, NPg)
+        plan = plan_sharding(
+            self.mesh, B, paged_kv.pool_page_count(cache.k_pages_g, shared))
         zero = jnp.zeros((), jnp.int32)
 
         # per-call temporaries shared by every layer of the scan
         self._ck = dict(slot=slot, start=start, page0=page0, v_len=v_len,
-                        q_pos=q_pos, first=first, plan=plan, mesh_on=mesh_on)
+                        q_pos=q_pos, first=first, plan=plan, mesh_on=mesh_on,
+                        shared=shared)
         if cache.page_table_g is not None:
             NPg = cache.page_table_g.shape[1]
             trow = jax.lax.dynamic_slice(cache.page_table_g, (slot, zero),
                                          (1, NPg))
-            self._ck["base_g"] = jnp.zeros((1, NPg), jnp.int32).at[
-                0, trow[0]].set(jnp.arange(NPg, dtype=jnp.int32) * T)
+            if shared:
+                # attention/fills walk LOGICAL pages through the row, so
+                # logical page j's base is j·T; stale/unallocated entries
+                # are masked by `pos < start` in the past partial
+                self._ck["trow_g"] = trow[0]
+                self._ck["base_g"] = jnp.broadcast_to(
+                    (jnp.arange(NPg, dtype=jnp.int32) * T)[None], (1, NPg))
+            else:
+                self._ck["base_g"] = jnp.zeros((1, NPg), jnp.int32).at[
+                    0, trow[0]].set(jnp.arange(NPg, dtype=jnp.int32) * T)
         if cache.page_pos_w is not None:
             NPw = cache.page_pos_w.shape[1]
             # ring state BEFORE this chunk; chunk 0 rewrote the row, so a
             # recycled occupant's stale bases are already gone
             self._ck["pos_w"] = jax.lax.dynamic_slice(
                 cache.page_pos_w, (slot, zero), (1, NPw))
+            if shared:
+                self._ck["trow_w"] = jax.lax.dynamic_slice(
+                    cache.page_table_w, (slot, zero), (1, NPw))[0]
 
         n_groups = cfg.n_layers // self.period
         grouped_params = jax.tree.map(
@@ -880,10 +936,25 @@ class KVNANDEngine:
         return logits, cache
 
     def _chunk_past_partial(self, pools, kname, vname, ksname, vsname, idx,
-                            q, base, window):
-        """Past-context partial of the chunk queries vs the slot's stripe."""
+                            q, base, window, trow=None):
+        """Past-context partial of the chunk queries vs the slot's pages.
+
+        Stripe layout slices the slot's private stripe; shared pools pass
+        the layer's GLOBAL pool plus the slot's table row (`trow`)."""
         ck = self._ck
         fmt = self.eng.kv_quant
+        from repro.kernels.paged_attention import paged_chunk_attention
+        if ck["shared"]:
+            kp = self._layer_slice(pools[kname], idx)     # [K, P, Ts, dh]
+            vp = self._layer_slice(pools[vname], idx)
+            ks = vs = None
+            if fmt != "none":
+                ks = self._layer_slice(pools[ksname], idx)
+                vs = self._layer_slice(pools[vsname], idx)
+            return paged_chunk_attention(
+                q, kp, vp, base, ck["start"], ck["q_pos"], window=window,
+                impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks,
+                v_scale=vs, page_table=trow[None])
         Lp, B, K, NP, Ts, dh = pools[kname].shape
         zero = jnp.zeros((), jnp.int32)
         pidx = (idx, ck["slot"], zero, zero, zero, zero)
@@ -902,7 +973,6 @@ class KVNANDEngine:
                 window=window, page_axes=ck["plan"].page_axes_g,
                 impl=self.eng.attn_impl, kv_quant=fmt,
                 k_scale=ks, v_scale=vs)
-        from repro.kernels.paged_attention import paged_chunk_attention
         return paged_chunk_attention(
             q, kp, vp, base, ck["start"], ck["q_pos"], window=window,
             impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks, v_scale=vs)
@@ -926,26 +996,32 @@ class KVNANDEngine:
             q, k, v, ck["q_pos"], ck["start"], causal=True, window=window,
             is_global=None, scale=scale)
         if not ck["first"]:
-            # past-context partial from the already-written stripe
+            # past-context partial from the already-written pages
             if use_window:
                 o2, m2, l2 = self._chunk_past_partial(
                     pools, "k_pages_w", "v_pages_w", "k_scale_w",
-                    "v_scale_w", w_idx, q, ck["pos_w"], window)
+                    "v_scale_w", w_idx, q, ck["pos_w"], window,
+                    trow=ck.get("trow_w"))
             else:
                 o2, m2, l2 = self._chunk_past_partial(
                     pools, "k_pages_g", "v_pages_g", "k_scale_g",
-                    "v_scale_g", g_idx, q, ck["base_g"], None)
+                    "v_scale_g", g_idx, q, ck["base_g"], None,
+                    trow=ck.get("trow_g"))
             o, m, l = seqpar.merge_two(o, m, l, o2, m2, l2)
         aout = attn_mod.project_out(pl_["attn"], cfg, o.astype(h.dtype))
 
-        # fill the chunk's K/V into the stripe (whole pages, in place)
+        # fill the chunk's K/V into the slot's pages (whole pages, in place)
         fmt = self.eng.kv_quant
         if use_window:
             names = ("k_pages_w", "v_pages_w", "k_scale_w", "v_scale_w")
             fill_idx, fill = w_idx, paged_kv.fill_chunk_window_at
+            fill_sh, trow = paged_kv.fill_chunk_window_at_shared, \
+                ck.get("trow_w")
         else:
             names = ("k_pages_g", "v_pages_g", "k_scale_g", "v_scale_g")
             fill_idx, fill = g_idx, paged_kv.fill_chunk_global_at
+            fill_sh, trow = paged_kv.fill_chunk_global_at_shared, \
+                ck.get("trow_g")
         for prefix_, kv_seq in (("k", k), ("v", v)):
             name = names[0] if prefix_ == "k" else names[1]
             sname = names[2] if prefix_ == "k" else names[3]
@@ -956,6 +1032,10 @@ class KVNANDEngine:
                     batch_axes=ck["plan"].batch_axes,
                     page_axes=ck["plan"].page_axes_g,
                     scale=pools.get(sname), kv_quant=fmt)
+            elif ck["shared"]:
+                out = fill_sh(pools[name], kv_seq, fill_idx, trow,
+                              ck["page0"], ck["v_len"],
+                              scale=pools.get(sname), kv_quant=fmt)
             else:
                 out = fill(pools[name], kv_seq, fill_idx, ck["slot"],
                            ck["page0"], ck["v_len"],

@@ -298,23 +298,62 @@ def decode_throughput(sys: SystemConfig, cfg: ModelConfig,
 
 
 # ---------------------------------------------------------------------------
-# Capacity / OOM
+# Capacity / OOM — pooled page allocation (§IV-D FTL mapping)
 # ---------------------------------------------------------------------------
+#
+# Track-B's shared page pool admits by ACTUAL footprint: a request holds
+# ceil(seq / page_tokens) pages, not a max_context stripe.  The capacity
+# model mirrors that: `is_oom` with a request mix charges the page-rounded
+# sum, and `pooled_capacity` answers "how many concurrent seq-length
+# contexts fit this flash budget" — the admission number serving_bench
+# tracks.
 
-def is_oom(sys: SystemConfig, cfg: ModelConfig, seq: int) -> bool:
-    wb = weight_bytes(cfg, sys.wbits)["total"]
-    kv = kv_bytes_per_token(cfg, sys.kv_bits_eff) * seq
+def kv_budget(sys: SystemConfig, cfg: ModelConfig) -> float:
+    """Bytes of the KV medium available for cache pages."""
     die_cap = sys.die.capacity
     if sys.kind == "base1":
-        return (wb > sys.weight_dies * die_cap) or (kv > sys.dram.usable)
-    if sys.kind == "base2":
-        return (wb > sys.weight_dies * die_cap) or \
-            (kv > sys.kv_dies * die_cap)
-    if sys.kind == "kvnand-d":
-        return (wb > sys.weight_dies * die_cap) or \
-            (kv > sys.kv_dies * die_cap)
+        return sys.dram.usable
+    if sys.kind in ("base2", "kvnand-d"):
+        return sys.kv_dies * die_cap
     # compact: weights + KV share all dies
-    return wb + kv > sys.weight_dies * die_cap
+    return sys.weight_dies * die_cap - weight_bytes(
+        cfg, sys.wbits)["total"]
+
+
+def kv_pool_bytes(cfg: ModelConfig, seqs, kv_bits: int,
+                  page_tokens: int = 64) -> float:
+    """Pooled KV footprint of a request mix: page-rounded per sequence,
+    summed — versus the stripe model's len(seqs) × max_context charge."""
+    per_tok = kv_bytes_per_token(cfg, kv_bits)
+    return sum(-(-int(s) // page_tokens) * page_tokens
+               for s in seqs) * per_tok
+
+
+def is_oom(sys: SystemConfig, cfg: ModelConfig, seq: int,
+           seqs=None, page_tokens: int = 64) -> bool:
+    """Single-context check by default; with `seqs`, a concurrent request
+    mix is charged its POOLED page-rounded footprint instead of the
+    per-slot worst case."""
+    wb = weight_bytes(cfg, sys.wbits)["total"]
+    if wb > sys.weight_dies * sys.die.capacity:
+        return True
+    if seqs is not None:
+        kv = kv_pool_bytes(cfg, seqs, sys.kv_bits_eff, page_tokens)
+    else:
+        kv = kv_bytes_per_token(cfg, sys.kv_bits_eff) * seq
+    return kv > kv_budget(sys, cfg)
+
+
+def pooled_capacity(sys: SystemConfig, cfg: ModelConfig, seq: int,
+                    page_tokens: int = 64) -> int:
+    """Concurrent seq-length contexts that fit the KV budget under pooled
+    allocation (0 when even one does not)."""
+    if is_oom(sys, cfg, seq):
+        return 0
+    per = kv_pool_bytes(cfg, [seq], sys.kv_bits_eff, page_tokens)
+    if per <= 0:
+        return 10 ** 9        # attention-free: no KV bound
+    return int(kv_budget(sys, cfg) // per)
 
 
 # ---------------------------------------------------------------------------

@@ -5,10 +5,25 @@ heads, so the paged-attention kernel streams whole pages HBM→VMEM with full
 spatial locality — the TPU analogue of eliminating flash page-read
 amplification.
 
-  k_pages / v_pages : [L, B, K, NP, T, dh]
+Two physical layouts share every read/write path:
+
+  stripe (default)            shared pool (EngineConfig.shared_pool)
+  k/v_pages: [L, B, K, NP, T, dh]   k/v_pages: [L, K, P_total, T, dh]
       L  stacked layers (scanned)        B  sequences (sharded over `data`)
-      K  kv heads                        NP pages per sequence (sharded over
-      T  page_tokens                        `model` — the paper's G2 dies)
+      K  kv heads                        NP logical pages per sequence
+      T  page_tokens                     P_total pool pages (sharded over
+                                           `model` — the paper's G2 dies)
+
+In the stripe layout each slot owns a private run of NP physical pages
+sized to max_context; `page_table` permutes only within the stripe.  In
+the SHARED layout (the paper's §IV-D FTL mapping proper) all slots draw
+pages from one pool per layer-group: `page_table_g/_w: [B, NP] -> phys`
+hold global physical indices handed out by the host-side free-page
+allocator (`core/page_alloc.py`), so a 128-token request holds 2 pages
+while a 100K-token one holds thousands — admission is bounded by actual
+KV footprint, prefixes can be shared copy-on-write, and unallocated
+logical pages stay data-invalid (their token positions lie beyond
+`lengths`).
 
 Two page pools per model when the arch mixes attention spans:
   * global pool — NP covers the full context;
@@ -17,9 +32,8 @@ Two page pools per model when the arch mixes attention spans:
     and their slots reused, bounding both capacity and — in flash terms —
     read-disturb accumulation).
 
-`page_table` gives the logical→physical indirection inside each sequence's
-stripe (the FTL analogue); `page_pos` records each physical page's base
-token position so window validity is derived from data, not control flow.
+`page_pos` records each physical page's base token position so window
+validity is derived from data, not control flow.
 
 Recurrent families store O(1) state instead (rwkv/ssm fields); hybrids carry
 both; encoder-decoder carries precomputed cross-attention K/V.
@@ -41,6 +55,15 @@ from repro.models import ssm as ssm_mod
 
 def ceil_div(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def pool_page_count(pool_leaf, shared: bool) -> int:
+    """Physical pages of a k/v pool leaf: the page axis sits at index 2
+    in the shared layout [L, K, P, T, dh], index 3 in the stripe layout
+    [L, B, K, NP, T, dh]; 1 when the arch has no such pool."""
+    if pool_leaf is None:
+        return 1
+    return pool_leaf.shape[2 if shared else 3]
 
 
 # ---------------------------------------------------------------------------
@@ -68,13 +91,15 @@ class DecodeCache:
     """Pytree of per-request decode state (all leaves optional)."""
     # paged attention KV — global-span layers
     k_pages_g: Optional[jax.Array] = None   # [Lg, B, K, NPg, T, dh]
-    v_pages_g: Optional[jax.Array] = None
+    v_pages_g: Optional[jax.Array] = None   # (shared: [Lg, K, Pg, T, dh])
     page_table_g: Optional[jax.Array] = None  # [B, NPg] logical -> physical
     # paged attention KV — sliding-window layers (ring-recycled)
     k_pages_w: Optional[jax.Array] = None   # [Lw, B, K, NPw, T, dh]
-    v_pages_w: Optional[jax.Array] = None
+    v_pages_w: Optional[jax.Array] = None   # (shared: [Lw, K, Pw, T, dh])
+    page_table_w: Optional[jax.Array] = None  # [B, NPw] ring slot -> physical
     page_pos_w: Optional[jax.Array] = None  # [B, NPw] base token position
     # per-page × per-kv-head dequant scales (kv8/kv4 pools only)
+    # (shared: [Lg, K, Pg] — one scale vector per physical pool page)
     k_scale_g: Optional[jax.Array] = None   # [Lg, B, K, NPg] f32
     v_scale_g: Optional[jax.Array] = None
     k_scale_w: Optional[jax.Array] = None   # [Lw, B, K, NPw] f32
@@ -127,20 +152,38 @@ def cache_spec(cfg: ModelConfig, eng: EngineConfig, batch: int,
         if Lg:
             NPg = eng.max_pages_per_seq or ceil_div(max_context, T)
             NPg = round_np(NPg, page_shards_g)
-            spec["k_pages_g"] = ((Lg, batch, K, NPg, Ts, dh), pool_dt)
-            spec["v_pages_g"] = ((Lg, batch, K, NPg, Ts, dh), pool_dt)
+            if eng.shared_pool:
+                Pg = round_np(eng.total_pages or batch * NPg, page_shards_g)
+                spec["k_pages_g"] = ((Lg, K, Pg, Ts, dh), pool_dt)
+                spec["v_pages_g"] = ((Lg, K, Pg, Ts, dh), pool_dt)
+                if fmt != "none":
+                    spec["k_scale_g"] = ((Lg, K, Pg), jnp.float32)
+                    spec["v_scale_g"] = ((Lg, K, Pg), jnp.float32)
+            else:
+                spec["k_pages_g"] = ((Lg, batch, K, NPg, Ts, dh), pool_dt)
+                spec["v_pages_g"] = ((Lg, batch, K, NPg, Ts, dh), pool_dt)
+                if fmt != "none":
+                    spec["k_scale_g"] = ((Lg, batch, K, NPg), jnp.float32)
+                    spec["v_scale_g"] = ((Lg, batch, K, NPg), jnp.float32)
             spec["page_table_g"] = ((batch, NPg), jnp.int32)
-            if fmt != "none":
-                spec["k_scale_g"] = ((Lg, batch, K, NPg), jnp.float32)
-                spec["v_scale_g"] = ((Lg, batch, K, NPg), jnp.float32)
         if Lw:
             NPw = round_np(ceil_div(cfg.window, T) + 1, page_shards_w)
-            spec["k_pages_w"] = ((Lw, batch, K, NPw, Ts, dh), pool_dt)
-            spec["v_pages_w"] = ((Lw, batch, K, NPw, Ts, dh), pool_dt)
+            if eng.shared_pool:
+                Pw = round_np(eng.total_pages_w or batch * NPw,
+                              page_shards_w)
+                spec["k_pages_w"] = ((Lw, K, Pw, Ts, dh), pool_dt)
+                spec["v_pages_w"] = ((Lw, K, Pw, Ts, dh), pool_dt)
+                spec["page_table_w"] = ((batch, NPw), jnp.int32)
+                if fmt != "none":
+                    spec["k_scale_w"] = ((Lw, K, Pw), jnp.float32)
+                    spec["v_scale_w"] = ((Lw, K, Pw), jnp.float32)
+            else:
+                spec["k_pages_w"] = ((Lw, batch, K, NPw, Ts, dh), pool_dt)
+                spec["v_pages_w"] = ((Lw, batch, K, NPw, Ts, dh), pool_dt)
+                if fmt != "none":
+                    spec["k_scale_w"] = ((Lw, batch, K, NPw), jnp.float32)
+                    spec["v_scale_w"] = ((Lw, batch, K, NPw), jnp.float32)
             spec["page_pos_w"] = ((batch, NPw), jnp.int32)
-            if fmt != "none":
-                spec["k_scale_w"] = ((Lw, batch, K, NPw), jnp.float32)
-                spec["v_scale_w"] = ((Lw, batch, K, NPw), jnp.float32)
     if cfg.family == "ssm":
         H = cfg.n_heads
         spec["rwkv_state"] = ((cfg.n_layers, batch, H, dh, dh), jnp.float32)
@@ -165,6 +208,7 @@ CACHE_AXES: Dict[str, Tuple] = {
     "page_table_g": ("batch", None),
     "k_pages_w": ("layer", "batch", None, "kv_pages", None, None),
     "v_pages_w": ("layer", "batch", None, "kv_pages", None, None),
+    "page_table_w": ("batch", None),
     "page_pos_w": ("batch", None),
     "k_scale_g": ("layer", "batch", None, "kv_pages"),
     "v_scale_g": ("layer", "batch", None, "kv_pages"),
@@ -178,6 +222,19 @@ CACHE_AXES: Dict[str, Tuple] = {
     "cross_k": ("layer", "batch", "act_seq", None, None),
     "cross_v": ("layer", "batch", "act_seq", None, None),
     "lengths": ("batch",),
+}
+
+# shared-pool leaves drop the batch dim: the physical page axis carries the
+# `kv_pages` (model) sharding instead of a per-slot stripe
+SHARED_CACHE_AXES: Dict[str, Tuple] = {
+    "k_pages_g": ("layer", None, "kv_pages", None, None),
+    "v_pages_g": ("layer", None, "kv_pages", None, None),
+    "k_pages_w": ("layer", None, "kv_pages", None, None),
+    "v_pages_w": ("layer", None, "kv_pages", None, None),
+    "k_scale_g": ("layer", None, "kv_pages"),
+    "v_scale_g": ("layer", None, "kv_pages"),
+    "k_scale_w": ("layer", None, "kv_pages"),
+    "v_scale_w": ("layer", None, "kv_pages"),
 }
 
 
@@ -200,10 +257,24 @@ def init_cache(cfg: ModelConfig, eng: EngineConfig, batch: int,
                       enc_len=enc_len, page_shards_g=page_shards_g,
                       page_shards_w=page_shards_w)
     leaves = {}
+    shared = eng.shared_pool
     for k, (shape, dt) in spec.items():
-        if k == "page_table_g":
-            leaves[k] = jnp.broadcast_to(
-                jnp.arange(shape[1], dtype=jnp.int32)[None], shape)
+        if k in ("page_table_g", "page_table_w"):
+            B, NP = shape
+            if shared:
+                # identity stripes mod pool size: slot b's logical page j
+                # starts on physical page b·NP + j (the allocator-free
+                # default used by one-shot prefill and parity tests; the
+                # scheduler overwrites tables from its allocator)
+                pool_key = "k_pages_g" if k == "page_table_g" else \
+                    "k_pages_w"
+                P = spec[pool_key][0][2]
+                rows = (jnp.arange(B, dtype=jnp.int32)[:, None] * NP
+                        + jnp.arange(NP, dtype=jnp.int32)[None]) % P
+                leaves[k] = rows
+            else:
+                leaves[k] = jnp.broadcast_to(
+                    jnp.arange(NP, dtype=jnp.int32)[None], shape)
         elif k == "page_pos_w":
             leaves[k] = jnp.full(shape, -(10 ** 9), jnp.int32)
         else:
@@ -212,11 +283,22 @@ def init_cache(cfg: ModelConfig, eng: EngineConfig, batch: int,
 
 
 def cache_logical_axes(cache: DecodeCache) -> DecodeCache:
-    """Mirror of the cache with logical-axis tuples (None leaves preserved)."""
-    return DecodeCache(**{
-        f.name: (CACHE_AXES[f.name]
-                 if getattr(cache, f.name) is not None else None)
-        for f in dataclasses.fields(cache)})
+    """Mirror of the cache with logical-axis tuples (None leaves preserved).
+
+    Shared-pool caches (pool leaves without the batch dim) pick the
+    matching-rank axes from SHARED_CACHE_AXES.
+    """
+    out = {}
+    for f in dataclasses.fields(cache):
+        leaf = getattr(cache, f.name)
+        if leaf is None:
+            out[f.name] = None
+            continue
+        axes = CACHE_AXES[f.name]
+        if len(axes) != leaf.ndim:
+            axes = SHARED_CACHE_AXES[f.name]
+        out[f.name] = axes
+    return DecodeCache(**out)
 
 
 # ---------------------------------------------------------------------------
@@ -267,68 +349,20 @@ def fill_prefill_at(pool, kv_seq, layer):
 
     pool: [L, B, K, NP, T, dh] (in-place carry); kv_seq: [B, S, K, dh];
     layer: traced index.  S tokens land in the first ceil(S/T) pages.
+    (Thin wrapper over `fill_layer`, the unified one-shot/chunk writer.)
     """
-    B, S, K, dh = kv_seq.shape
-    T, NP = pool.shape[4], pool.shape[3]
-    n_pages = ceil_div(S, T)
-    pad = n_pages * T - S
-    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    x = x.reshape(B, n_pages, T, K, dh).transpose(0, 3, 1, 2, 4)
-    zero = jnp.zeros((), jnp.int32)
-    return jax.lax.dynamic_update_slice(
-        pool, x[None].astype(pool.dtype),
-        (layer, zero, zero, zero, zero, zero))
+    return fill_layer(pool, kv_seq, layer, ring=False)
 
 
 def fill_window_at(pool, kv_seq, layer):
     """Bulk-write the newest ring pages into ONE layer of a window pool."""
-    B, S, K, dh = kv_seq.shape
-    NP, T = pool.shape[3], pool.shape[4]
-    n_src = ceil_div(S, T)
-    pad = n_src * T - S
-    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    x = x.reshape(B, n_src, T, K, dh).transpose(0, 3, 1, 2, 4)
-    for sp in range(max(0, n_src - NP), n_src):               # static loop
-        pool = pool.at[layer, :, :, sp % NP].set(
-            x[:, :, sp].astype(pool.dtype))
-    return pool
+    return fill_layer(pool, kv_seq, layer, ring=True)
 
 
-def fill_from_prefill(k_pages, kv_seq, page_table=None):
-    """Bulk-write prefill K/V [B, S, K, dh] into pages [B, K, NP, T, dh].
-
-    S tokens land in the first ceil(S/T) logical pages in order (page_table
-    is identity at prefill time).
-    """
-    B, S, K, dh = kv_seq.shape
-    T = k_pages.shape[3]
-    NP = k_pages.shape[2]
-    n_pages = ceil_div(S, T)
-    pad = n_pages * T - S
-    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    x = x.reshape(B, n_pages, T, K, dh).transpose(0, 3, 1, 2, 4)
-    return jax.lax.dynamic_update_slice(
-        k_pages, x.astype(k_pages.dtype), (0, 0, 0, 0, 0))
-
-
-def fill_window(k_pages, kv_seq):
-    """Bulk-write the newest ring pages from prefill K/V.
-
-    k_pages: [B, K, NP, T, dh] ring pool; kv_seq: [B, S, K, dh].  Only the
-    newest NP source pages land (older ones are already outside any window);
-    ring slot = source_page mod NP.  Returns updated pages (base positions
-    are computed statically by the engine).
-    """
-    B, S, K, dh = kv_seq.shape
-    _, _, NP, T, _ = k_pages.shape
-    n_src = ceil_div(S, T)
-    pad = n_src * T - S
-    x = jnp.pad(kv_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    x = x.reshape(B, n_src, T, K, dh).transpose(0, 3, 1, 2, 4)
-    kp = k_pages
-    for sp in range(max(0, n_src - NP), n_src):               # static loop
-        kp = kp.at[:, :, sp % NP].set(x[:, :, sp].astype(kp.dtype))
-    return kp
+def fill_prefill_at_quant(pool, scale, kv_seq, layer, fmt: str):
+    """Quantizing variant of `fill_prefill_at` (global pool, one layer)."""
+    return fill_layer(pool, kv_seq, layer, ring=False, scale=scale,
+                      kv_quant=fmt)
 
 
 def window_page_positions(S: int, NP: int, T: int) -> np.ndarray:
@@ -435,30 +469,158 @@ def _paged_from_seq(kv_seq, T: int):
     return x.reshape(B, n_pages, T, K, dh).transpose(0, 3, 1, 2, 4)
 
 
-def fill_prefill_at_quant(pool, scale, kv_seq, layer, fmt: str):
-    """Quantizing variant of `fill_prefill_at` (global pool, one layer)."""
-    T = pool.shape[4] * (2 if fmt == "kv4" else 1)
-    x = _paged_from_seq(kv_seq, T)                 # [B, K, n_pages, T, dh]
-    q, s = quant.quantize_kv_page(x, fmt)
-    zero = jnp.zeros((), jnp.int32)
-    pool = jax.lax.dynamic_update_slice(
-        pool, q[None], (layer, zero, zero, zero, zero, zero))
-    scale = jax.lax.dynamic_update_slice(scale, s[None],
-                                         (layer, zero, zero, zero))
-    return pool, scale
+# ---------------------------------------------------------------------------
+# Unified one-shot fill: the whole-prompt chunk fill (satellite: the old
+# per-arch fill_prefill_at/fill_window_at(+quant, +dyn) bodies collapsed
+# onto the chunk-fill writer — bit-identical pages, one code path)
+# ---------------------------------------------------------------------------
 
+def fill_layer(pool, kv_seq, layer, *, ring: bool, true_len=None,
+               table=None, scale=None, kv_quant: str = "none"):
+    """One-shot prefill fill of ONE layer for every batch row.
 
-def fill_window_at_quant(pool, scale, kv_seq, layer, fmt: str):
-    """Quantizing variant of `fill_window_at` (ring pool, one layer)."""
+    Semantically this IS `prefill_chunk`'s fill applied to one whole-prompt
+    chunk at page0 = 0 (the chunk-fill parity tests pin the page contents
+    bit-identical), generalized over:
+
+      ring      False -> global pool (logical page sp), True -> window ring
+                (ring slot sp % NP, ascending so each slot keeps its
+                NEWEST valid occupant);
+      true_len  traced count of real tokens when kv_seq carries bucket
+                padding (padding pages are never written); None -> all S
+                tokens are real;
+      table     shared-pool page table [B, NP] (physical ids); None ->
+                stripe layout;
+      kv_quant  kv8/kv4 pools quantize whole pages and return
+                (pool, scale).
+
+    The exact-length stripe global fill keeps the original fused
+    single-slice write (identity mapping, every page valid — bit-identical
+    to the page walk, and O(1) ops for a 500-page prompt).
+    """
+    Ts = pool.shape[-2]
+    T = Ts * (2 if kv_quant == "kv4" else 1)
+    B, S = kv_seq.shape[:2]
+    if table is not None:
+        return _fill_layer_shared(pool, kv_seq, layer, table, ring=ring,
+                                  true_len=true_len, scale=scale,
+                                  kv_quant=kv_quant)
     NP = pool.shape[3]
-    T = pool.shape[4] * (2 if fmt == "kv4" else 1)
-    x = _paged_from_seq(kv_seq, T)
-    q, s = quant.quantize_kv_page(x, fmt)
+    if not ring and true_len is None:
+        x = _paged_from_seq(kv_seq, T)             # [B, K, n_pages, Ts, dh]
+        zero = jnp.zeros((), jnp.int32)
+        if kv_quant != "none":
+            q, s = quant.quantize_kv_page(x, kv_quant)
+            pool = jax.lax.dynamic_update_slice(
+                pool, q[None], (layer, zero, zero, zero, zero, zero))
+            scale = jax.lax.dynamic_update_slice(scale, s[None],
+                                                 (layer, zero, zero, zero))
+            return pool, scale
+        return jax.lax.dynamic_update_slice(
+            pool, x[None].astype(pool.dtype),
+            (layer, zero, zero, zero, zero, zero))
+    if ring and true_len is not None:
+        # bucketed ring: the newest real page is traced, so a static trim
+        # cannot find it — walk the newest ≤ NP REAL source pages via
+        # traced indices (min(NP, n_pad) writes, not one per bucket page)
+        return _fill_ring_dyn(pool, kv_seq, layer, true_len, scale=scale,
+                              kv_quant=kv_quant)
+    page0 = 0
+    if ring:
+        # statically drop source pages that can only be overwritten: the
+        # ring keeps the newest NP pages, so start the "chunk" there
+        page0 = max(0, ceil_div(S, T) - NP)
+        kv_seq = kv_seq[:, page0 * T:]
+    valid_len = jnp.asarray(kv_seq.shape[1], jnp.int32)
+    fill = fill_chunk_window_at if ring else fill_chunk_global_at
+    return fill(pool, kv_seq, layer, None,
+                jnp.asarray(page0, jnp.int32), valid_len,
+                scale=scale, kv_quant=kv_quant)
+
+
+def _fill_ring_dyn(pool, kv_seq, layer, true_len, *, scale=None,
+                   kv_quant: str = "none"):
+    """Ring-fill ONE layer when only `true_len` of kv_seq's S tokens are
+    real (bucket padding beyond).  Walks the NEWEST ≤ NP real source
+    pages via traced indices so padding pages never evict live ones and
+    the write count stays min(NP, n_pad)."""
+    B, S, K, dh = kv_seq.shape
+    NP, Ts = pool.shape[3], pool.shape[4]
+    T = Ts * (2 if kv_quant == "kv4" else 1)
+    x = _paged_from_seq(kv_seq, T)                 # [B, K, n_pad, T, dh]
+    n_pad = x.shape[2]
+    if kv_quant != "none":
+        x, s_all = quant.quantize_kv_page(x, kv_quant)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    n_src = (true_len + T - 1) // T
+    zero = jnp.zeros((), jnp.int32)
+    for r in range(min(NP, n_pad)):                # static trip count
+        sp = n_src - 1 - r                         # traced source page
+        ok = sp >= 0
+        spc = jnp.clip(sp, 0, n_pad - 1)
+        page = jax.lax.dynamic_slice_in_dim(x, spc, 1, axis=2)  # [B,K,1,*]
+        phys = spc % NP
+        pidx = (layer, zero, zero, phys, zero, zero)
+        cur = jax.lax.dynamic_slice(pool, pidx, (1, B, K, 1, Ts, dh))
+        upd = jnp.where(ok, page[None].astype(pool.dtype), cur)
+        pool = jax.lax.dynamic_update_slice(pool, upd, pidx)
+        if kv_quant != "none":
+            sidx = (layer, zero, zero, phys)
+            s_pg = jax.lax.dynamic_slice_in_dim(s_all, spc, 1, axis=2)
+            cur_s = jax.lax.dynamic_slice(scale, sidx, (1, B, K, 1))
+            scale = jax.lax.dynamic_update_slice(
+                scale, jnp.where(ok, s_pg[None], cur_s), sidx)
+    if kv_quant != "none":
+        return pool, scale
+    return pool
+
+
+def _fill_layer_shared(pool, kv_seq, layer, table, *, ring: bool,
+                       true_len=None, scale=None, kv_quant: str = "none"):
+    """`fill_layer` for the shared pool: pages scatter through the table.
+
+    pool: [L, K, P, Ts, dh]; table: [B, NP] physical ids; writes whose
+    logical page holds no real token are redirected past P and dropped.
+    """
+    L, K, P, Ts, dh = pool.shape
+    T = Ts * (2 if kv_quant == "kv4" else 1)
+    B, S = kv_seq.shape[:2]
+    NP = table.shape[1]
+    x = _paged_from_seq(kv_seq, T)                 # [B, K, n_src, Ts, dh]
+    if kv_quant != "none":
+        x, s_all = quant.quantize_kv_page(x, kv_quant)
     n_src = x.shape[2]
-    for sp in range(max(0, n_src - NP), n_src):               # static loop
-        pool = pool.at[layer, :, :, sp % NP].set(q[:, :, sp])
-        scale = scale.at[layer, :, :, sp % NP].set(s[:, :, sp])
-    return pool, scale
+    valid_len = jnp.asarray(S if true_len is None else true_len, jnp.int32)
+    # NB: `layer` (traced scalar) and `phys` are NON-adjacent advanced
+    # indices, so the scatter result dims are [*phys.shape, K, ...]
+    if not ring:
+        n_w = min(n_src, NP)
+        ok = (jnp.arange(n_w, dtype=jnp.int32) * T) < valid_len   # [n_w]
+        phys = jnp.where(ok[None], table[:, :n_w], P)             # [B, n_w]
+        pool = pool.at[layer, :, phys].set(
+            x[:, :, :n_w].transpose(0, 2, 1, 3, 4).astype(pool.dtype),
+            mode="drop")
+        if kv_quant != "none":
+            scale = scale.at[layer, :, phys].set(
+                s_all[:, :, :n_w].transpose(0, 2, 1), mode="drop")
+            return pool, scale
+        return pool
+    # ring: ascending source pages so each ring slot keeps its newest
+    # valid occupant (exactly the chunk-fill ordering); with an exact
+    # length the oldest n_src - NP pages can only be overwritten — skip
+    # them statically
+    sp0 = max(0, n_src - NP) if true_len is None else 0
+    for sp in range(sp0, n_src):                   # static trip count
+        ok = (sp * T) < valid_len
+        phys = jnp.where(ok, table[:, sp % NP], P)                # [B]
+        pool = pool.at[layer, :, phys].set(
+            x[:, :, sp].astype(pool.dtype), mode="drop")
+        if kv_quant != "none":
+            scale = scale.at[layer, :, phys].set(
+                s_all[:, :, sp], mode="drop")
+    if kv_quant != "none":
+        return pool, scale
+    return pool
 
 
 # ---------------------------------------------------------------------------
@@ -481,30 +643,50 @@ def _fill_chunk_pages(pool, kv_chunk, layer, slot, page_of, valid_of, *,
 
     page_of(sp) -> traced physical page index (already in range);
     valid_of(sp) -> traced bool, False drops the write (keeps `cur`).
+    slot=None writes EVERY batch row at the same page coordinates (the
+    one-shot `fill_layer` path: a prefill is one whole-prompt chunk).
+    A 5-D pool ([L, K, P, Ts, dh]) is the SHARED layout: page_of must
+    then return table-translated GLOBAL physical indices, and `slot` is
+    meaningless (the table row already names the slot's pages).
     """
-    B1, C, K, dh = kv_chunk.shape
-    NP, Ts = pool.shape[3], pool.shape[4]
+    shared = pool.ndim == 5
+    Bc, C, K, dh = kv_chunk.shape
+    Ts = pool.shape[-2]
     T = Ts * (2 if kv_quant == "kv4" else 1)
-    x = _paged_from_seq(kv_chunk, T)               # [1, K, n_pages, Ts, dh]
+    x = _paged_from_seq(kv_chunk, T)               # [Bc, K, n_pages, Ts, dh]
     n_pages = x.shape[2]
     if kv_quant != "none":
         x, s_all = quant.quantize_kv_page(x, kv_quant)
     zero = jnp.zeros((), jnp.int32)
+    if slot is None and not shared:
+        assert Bc == pool.shape[1], (Bc, pool.shape)
+        slot = zero
     for sp in range(n_pages):                      # static trip count
         gp = page_of(sp)
         ok = valid_of(sp)
-        pidx = (layer, slot, zero, gp, zero, zero)
-        cur = jax.lax.dynamic_slice(pool, pidx, (1, 1, K, 1, Ts, dh))
-        page = jax.lax.dynamic_slice_in_dim(x, sp, 1, axis=2)  # [1,K,1,*]
+        page = jax.lax.dynamic_slice_in_dim(x, sp, 1, axis=2)  # [Bc,K,1,*]
+        if shared:
+            pidx = (layer, zero, gp, zero, zero)
+            blk = (1, K, 1, Ts, dh)
+            upd = page[0][None]                    # [1, K, 1, Ts, dh]
+        else:
+            pidx = (layer, slot, zero, gp, zero, zero)
+            blk = (1, Bc, K, 1, Ts, dh)
+            upd = page[None]
+        cur = jax.lax.dynamic_slice(pool, pidx, blk)
         pool = jax.lax.dynamic_update_slice(
-            pool, jnp.where(ok, page[:, None].astype(pool.dtype), cur),
-            pidx)
+            pool, jnp.where(ok, upd.astype(pool.dtype), cur), pidx)
         if kv_quant != "none":
-            sidx = (layer, slot, zero, gp)
             s_pg = jax.lax.dynamic_slice_in_dim(s_all, sp, 1, axis=2)
-            cur_s = jax.lax.dynamic_slice(scale, sidx, (1, 1, K, 1))
+            if shared:
+                sidx = (layer, zero, gp)
+                sblk, s_upd = (1, K, 1), s_pg[0][None]
+            else:
+                sidx = (layer, slot, zero, gp)
+                sblk, s_upd = (1, Bc, K, 1), s_pg[None]
+            cur_s = jax.lax.dynamic_slice(scale, sidx, sblk)
             scale = jax.lax.dynamic_update_slice(
-                scale, jnp.where(ok, s_pg[:, None], cur_s), sidx)
+                scale, jnp.where(ok, s_upd, cur_s), sidx)
     if kv_quant != "none":
         return pool, scale
     return pool
@@ -550,41 +732,90 @@ def fill_chunk_window_at(pool, kv_chunk, layer, slot, page0, valid_len, *,
 
 
 # ---------------------------------------------------------------------------
-# Traced-length window fill (bucketed prefill: prompts padded to a bucket)
+# Shared-pool write paths: all coordinates go through the page table
 # ---------------------------------------------------------------------------
+#
+# Pools are [L, K, P, Ts, dh] (+ scales [L, K, P]); the per-slot page
+# tables hold GLOBAL physical indices handed out by the host allocator
+# (`core/page_alloc.py`).  A table entry equal to P (one past the pool) is
+# the engine's drop sentinel: scatters with mode="drop" discard the write,
+# so inactive slots and unallocated logical pages can never corrupt a
+# page another sequence owns.
 
-def fill_window_at_dyn(pool, kv_seq, layer, true_len, *, scale=None,
-                       kv_quant: str = "none"):
-    """Ring-fill ONE layer when only `true_len` of kv_seq's S tokens are
-    real (the rest is bucket padding).  Walks the NEWEST ≤ NP real source
-    pages via traced indices so padding pages never evict live ones.
+def append_global_shared(pool, layer, phys, slot, val):
+    """Ragged one-token append into a shared stacked pool.
+
+    pool: [L, K, P, Ts, dh]; phys/slot: [B] per-sequence physical page and
+    in-page slot; val: [B, K, dh].  phys >= P drops the write.
     """
-    B, S, K, dh = kv_seq.shape
-    NP, Ts = pool.shape[3], pool.shape[4]
-    T = Ts * (2 if kv_quant == "kv4" else 1)
-    x = _paged_from_seq(kv_seq, T)                 # [B, K, n_pad, T, dh]
-    n_pad = x.shape[2]
-    if kv_quant != "none":
-        x, s_all = quant.quantize_kv_page(x, kv_quant)
-    true_len = jnp.asarray(true_len, jnp.int32)
-    n_src = (true_len + T - 1) // T
-    zero = jnp.zeros((), jnp.int32)
-    for r in range(min(NP, n_pad)):                # static trip count
-        sp = n_src - 1 - r                         # traced source page
-        ok = sp >= 0
-        spc = jnp.clip(sp, 0, n_pad - 1)
-        page = jax.lax.dynamic_slice_in_dim(x, spc, 1, axis=2)  # [B,K,1,*]
-        phys = spc % NP
-        pidx = (layer, zero, zero, phys, zero, zero)
-        cur = jax.lax.dynamic_slice(pool, pidx, (1, B, K, 1, Ts, dh))
-        upd = jnp.where(ok, page[None].astype(pool.dtype), cur)
-        pool = jax.lax.dynamic_update_slice(pool, upd, pidx)
-        if kv_quant != "none":
-            sidx = (layer, zero, zero, phys)
-            s_pg = jax.lax.dynamic_slice_in_dim(s_all, spc, 1, axis=2)
-            cur_s = jax.lax.dynamic_slice(scale, sidx, (1, B, K, 1))
-            scale = jax.lax.dynamic_update_slice(
-                scale, jnp.where(ok, s_pg[None], cur_s), sidx)
-    if kv_quant != "none":
-        return pool, scale
-    return pool
+    # layer (traced scalar) + phys/slot are non-adjacent advanced indices:
+    # scatter result dims are [B, K, dh]
+    return pool.at[layer, :, phys, slot].set(
+        val.astype(pool.dtype), mode="drop")
+
+
+def append_token_quant_shared(pool, scale, layer, phys, slot, val,
+                              fmt: str):
+    """Ragged requantizing append into a shared quantized pool.
+
+    Gathers each sequence's touched page [K, Ts, dh] from the pool,
+    dequantizes with its scale, inserts the token, zeros dead slots,
+    requantizes, scatters page + scale back (O(page) per layer, exactly
+    the stripe-layout `append_token_quant` through one indirection).
+    """
+    L, K, P, Ts, dh = pool.shape
+    B = phys.shape[0]
+    qpage = pool[layer, :, phys]                   # [B, K, Ts, dh] (clipped
+    s = scale[layer, :, phys]                      # [B, K]  gather for the
+    page = quant.dequantize_kv_page(qpage, s, fmt)  # dropped sentinel rows)
+    b_idx = jnp.arange(B)
+    page = page.at[b_idx, :, slot].set(val.astype(page.dtype))
+    T = page.shape[-2]
+    live = jnp.arange(T)[None, :] <= slot[:, None]             # [B, T]
+    page = jnp.where(live[:, None, :, None], page, 0.0)
+    q2, s2 = quant.quantize_kv_page(page, fmt)
+    pool = pool.at[layer, :, phys].set(q2, mode="drop")
+    scale = scale.at[layer, :, phys].set(s2, mode="drop")
+    return pool, scale
+
+
+def fill_chunk_global_at_shared(pool, kv_chunk, layer, table_row, page0,
+                                valid_len, *, scale=None,
+                                kv_quant: str = "none"):
+    """Shared-pool `fill_chunk_global_at`: logical chunk page page0+sp
+    resolves through ``table_row`` [NP] to its pool page (same writer
+    body — `_fill_chunk_pages` detects the 5-D shared layout)."""
+    NP = table_row.shape[0]
+    T = pool.shape[3] * (2 if kv_quant == "kv4" else 1)
+    return _fill_chunk_pages(
+        pool, kv_chunk, layer, None,
+        lambda sp: table_row[jnp.clip(page0 + sp, 0, NP - 1)],
+        lambda sp: (sp * T < valid_len) & (page0 + sp < NP),
+        scale=scale, kv_quant=kv_quant)
+
+
+def fill_chunk_window_at_shared(pool, kv_chunk, layer, table_row, page0,
+                                valid_len, *, scale=None,
+                                kv_quant: str = "none"):
+    """Shared-pool ring chunk fill: ring slot (page0+sp) % NP resolves
+    through ``table_row`` [NPw]."""
+    NP = table_row.shape[0]
+    T = pool.shape[3] * (2 if kv_quant == "kv4" else 1)
+    return _fill_chunk_pages(
+        pool, kv_chunk, layer, None,
+        lambda sp: table_row[(page0 + sp) % NP],
+        lambda sp: sp * T < valid_len,
+        scale=scale, kv_quant=kv_quant)
+
+
+def copy_page_shared(pool, src, dst):
+    """Copy one physical page src -> dst across ALL layers of a shared
+    pool [L, K, P, ...] (COW: the new exclusive owner starts from the
+    shared page's bytes; works for code pools and scale leaves alike)."""
+    L, K = pool.shape[:2]
+    tail = pool.shape[3:]
+    zeros = (0,) * len(tail)
+    page = jax.lax.dynamic_slice(
+        pool, (0, 0, jnp.asarray(src, jnp.int32)) + zeros, (L, K, 1) + tail)
+    return jax.lax.dynamic_update_slice(
+        pool, page, (0, 0, jnp.asarray(dst, jnp.int32)) + zeros)

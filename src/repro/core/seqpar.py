@@ -611,6 +611,140 @@ def paged_decode_attention_sharded(
         q, k_pages, v_pages, page_base, length, k_new, v_new, phys, slot)
 
 
+# ---------------------------------------------------------------------------
+# Shared-pool (FTL-mapped) variants: P_total sharded over the mesh
+# ---------------------------------------------------------------------------
+#
+# The shared pool [K, P_total, T, dh] shards its PHYSICAL page axis over
+# `page_axes` (the paper's G2 dies); page tables hold GLOBAL physical
+# indices, so each shard subtracts its page offset and masks entries
+# outside its local range — a table walk is shard-local arithmetic, and
+# the KV bytes still never cross the interconnect.
+
+def paged_decode_attention_sharded_shared(
+    q, k_pages, v_pages, page_table, page_base, length, mesh: Mesh, *,
+    window: Optional[int] = None, is_global=None,
+    batch_axes: Sequence[str] = ("data",),
+    page_axes: Sequence[str] = ("model",),
+    impl: str = "auto",
+    kv_quant: str = "none",
+    k_scale=None, v_scale=None,       # [K, P_total] per-page×head scales
+):
+    """q: [B, H, dh]; pages: [K, P_total, T, dh] sharded on P_total;
+    page_table: [B, NP] GLOBAL physical indices; page_base: [B, NP] base
+    position of LOGICAL page j (<0 = unwritten); length: [B].
+
+    Each shard translates the table into its local page range (entries it
+    does not own become data-invalid via page_base = -1e9), runs the
+    shared-pool partial over its local pages, and the partials merge via
+    the log-sum-exp combine (the paper's NPU aggregation).
+    """
+    from repro.kernels.paged_attention.ops import paged_attention_partial
+
+    n_page_shards = 1
+    for a in page_axes:
+        n_page_shards *= mesh.shape[a]
+
+    bspec = _axes_spec(batch_axes)
+    qspec = P(bspec, None, None)
+    pspec = P(None, _axes_spec(page_axes), None, None)
+    sspec = P(None, _axes_spec(page_axes))
+    tspec = P(bspec, None)
+    lenspec = P(bspec)
+
+    def run(qq, kp, vp, tbl, base, ln, ks=None, vs=None):
+        P_local = kp.shape[1]
+        off = _shard_page_offset(page_axes, P_local)
+        tl = tbl - off
+        owned = (tl >= 0) & (tl < P_local)
+        base_l = jnp.where(owned, base, -(10 ** 9))
+        tl = jnp.clip(tl, 0, P_local - 1)
+        o, m, l = paged_attention_partial(
+            qq, kp, vp, base_l, ln, window=window, is_global=is_global,
+            impl=impl, kv_quant=kv_quant, k_scale=ks, v_scale=vs,
+            page_table=tl)
+        if n_page_shards > 1:
+            o = combine_partials(o, m, l, tuple(page_axes))
+        return o.astype(qq.dtype)
+
+    if kv_quant != "none":
+        return shard_map(run, mesh=mesh,
+                         in_specs=(qspec, pspec, pspec, tspec, tspec,
+                                   lenspec, sspec, sspec),
+                         out_specs=qspec, check_vma=False)(
+            q, k_pages, v_pages, page_table, page_base, length,
+            k_scale, v_scale)
+    return shard_map(run, mesh=mesh,
+                     in_specs=(qspec, pspec, pspec, tspec, tspec, lenspec),
+                     out_specs=qspec, check_vma=False)(
+        q, k_pages, v_pages, page_table, page_base, length)
+
+
+def sharded_append_shared(pool_k, pool_v, layer, k_new, v_new, phys, slot,
+                          mesh: Mesh, *,
+                          batch_axes: Sequence[str] = ("data",),
+                          page_axes: Sequence[str] = ("model",),
+                          k_scale=None, v_scale=None,
+                          kv_quant: str = "none"):
+    """One-token append into FULL stacked shared pools [L, K, P, T, dh]
+    at a traced layer index: the shard owning each sequence's physical
+    page scatters locally; everyone else's write drops (ragged positions,
+    so this is the continuous-batching path on a mesh).
+
+    Returns (k, v) or (k, v, k_scale, v_scale) when quantized.
+
+    NB: the shared pool has no batch dim, so over any BATCH mesh axes the
+    pool is replicated — every replica must apply the SAME full-batch
+    append or the copies diverge.  The new-token values/positions are
+    therefore replicated into the shard_map (a [B, K, dh] vector against
+    a pool measured in GB), and only the PAGE axes select which shard's
+    local range actually lands the write.
+    """
+    from repro.core import paged_kv as pk
+
+    del batch_axes                       # see NB above — values replicate
+    pspec = P(None, None, _axes_spec(page_axes), None, None)
+    sspec = P(None, None, _axes_spec(page_axes))
+    nspec = P(None, None, None)
+    lspec = P(None)
+
+    def local(kp, vp, kn, vn, ph, sl, lyr):
+        P_local = kp.shape[2]
+        off = _shard_page_offset(page_axes, P_local)
+        ph_loc = ph - off
+        ph_drop = jnp.where((ph_loc >= 0) & (ph_loc < P_local), ph_loc,
+                            P_local)
+        kp = pk.append_global_shared(kp, lyr, ph_drop, sl, kn)
+        vp = pk.append_global_shared(vp, lyr, ph_drop, sl, vn)
+        return kp, vp
+
+    def local_quant(kp, vp, ks, vs, kn, vn, ph, sl, lyr):
+        P_local = kp.shape[2]
+        off = _shard_page_offset(page_axes, P_local)
+        ph_loc = ph - off
+        ph_drop = jnp.where((ph_loc >= 0) & (ph_loc < P_local), ph_loc,
+                            P_local)
+        kp, ks = pk.append_token_quant_shared(kp, ks, lyr, ph_drop, sl, kn,
+                                              kv_quant)
+        vp, vs = pk.append_token_quant_shared(vp, vs, lyr, ph_drop, sl, vn,
+                                              kv_quant)
+        return kp, vp, ks, vs
+
+    lyr = jnp.asarray(layer, jnp.int32)
+    if kv_quant != "none":
+        return shard_map(local_quant, mesh=mesh,
+                         in_specs=(pspec, pspec, sspec, sspec, nspec, nspec,
+                                   lspec, lspec, P()),
+                         out_specs=(pspec, pspec, sspec, sspec),
+                         check_vma=False)(
+            pool_k, pool_v, k_scale, v_scale, k_new, v_new, phys, slot, lyr)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pspec, pspec, nspec, nspec, lspec, lspec,
+                               P()),
+                     out_specs=(pspec, pspec), check_vma=False)(
+        pool_k, pool_v, k_new, v_new, phys, slot, lyr)
+
+
 def _axes_spec(axes: Sequence[str]):
     axes = tuple(axes)
     if not axes:

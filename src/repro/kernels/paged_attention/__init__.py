@@ -3,6 +3,7 @@ from repro.kernels.paged_attention.ops import (  # noqa: F401
     paged_chunk_attention,
 )
 from repro.kernels.paged_attention.ref import (  # noqa: F401
+    gather_table_pages,
     paged_attention_partial_ref,
     paged_chunk_attention_ref,
     paged_to_dense,

@@ -112,6 +112,148 @@ def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
         l_ref[0, 0] = l_scr[...]
 
 
+def _load_page_shared(ref, T: int, dh: int, kv_quant: str):
+    """VMEM single-page block [1, 1, Ts, dh] -> [T, dh] f32 raw codes."""
+    if kv_quant == "kv4":
+        qp = ref[0, 0]                                       # [T/2, dh]
+        hi = ((qp >> 4) & 0xF).astype(jnp.int8) - 8
+        lo = (qp & 0xF).astype(jnp.int8) - 8
+        x = jnp.stack([hi, lo], axis=1)                      # [T/2, 2, dh]
+        return x.reshape(T, dh).astype(jnp.float32)
+    return ref[0, 0].reshape(T, dh).astype(jnp.float32)
+
+
+def _kernel_shared(tbl_ref, base_ref, len_ref,       # scalar prefetch (SMEM)
+                   q_ref, k_ref, v_ref, *refs,       # VMEM blocks (+scales)
+                   T: int, n_blocks: int, window: Optional[int],
+                   scale: float, kv_quant: str):
+    """Shared-pool body: identical online softmax to `_kernel`, but each
+    grid step streams ONE pool page picked by the prefetched page table
+    (the block index map below) — the §IV-D logical→physical walk happens
+    in SMEM before the DMA, never in the inner loop."""
+    if kv_quant == "none":
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = refs
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    G, dh = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [G, dh]
+    k = _load_page_shared(k_ref, T, dh, kv_quant)            # [T, dh]
+    v = _load_page_shared(v_ref, T, dh, kv_quant)
+
+    length = len_ref[b]
+    base = base_ref[b, ib]
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)[0]
+    valid = (base >= 0) & (pos < length)
+    if window is not None:
+        valid &= pos > (length - 1 - window)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, T]
+    if kv_quant != "none":
+        s = s * ks_ref[0, 0]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                      # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    pv = p * vs_ref[0, 0] if kv_quant != "none" else p
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ib == n_blocks - 1)
+    def _finalize():
+        ll = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / ll).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def paged_attention_pallas_shared(
+    q: jax.Array,          # [B, K, G, dh]
+    k_pages: jax.Array,    # [K, P_total, T, dh] (kv4: [K, P, T/2, dh])
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [B, NP] int32 physical indices (in range)
+    page_base: jax.Array,  # [B, NP] absolute pos of slot 0 (<0 = unwritten)
+    length: jax.Array,     # [B] int32
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+    kv_quant: str = "none",
+    k_scale: Optional[jax.Array] = None,   # [K, P_total] f32
+    v_scale: Optional[jax.Array] = None,
+):
+    """Shared-pool paged decode attention: grid (B, K, NP) with the page
+    table scalar-prefetched so the BLOCK INDEX MAP addresses the global
+    P_total axis directly — one arbitrary pool page per step, no gathered
+    copy of the slot's stripe ever materializes."""
+    K, P, Ts, dh = k_pages.shape
+    T = 2 * Ts if kv_quant == "kv4" else Ts
+    B, NP = page_table.shape
+    G = q.shape[2]
+    scale = dh ** -0.5
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, tbl, base, ln:
+                     (b, k, 0, 0)),
+        pl.BlockSpec((1, 1, Ts, dh), lambda b, k, ib, tbl, base, ln:
+                     (k, tbl[b, ib], 0, 0)),
+        pl.BlockSpec((1, 1, Ts, dh), lambda b, k, ib, tbl, base, ln:
+                     (k, tbl[b, ib], 0, 0)),
+    ]
+    inputs = [q, k_pages, v_pages]
+    if kv_quant != "none":
+        assert k_scale is not None and v_scale is not None, kv_quant
+        sspec = pl.BlockSpec((1, 1), lambda b, k, ib, tbl, base, ln:
+                             (k, tbl[b, ib]))
+        in_specs += [sspec, sspec]
+        inputs += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, K, NP),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel_shared, T=T, n_blocks=NP,
+                               window=window, scale=scale, kv_quant=kv_quant)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, G, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(page_table.astype(jnp.int32), page_base, length, *inputs)
+    return o, m[..., 0], l[..., 0]
+
+
 def paged_attention_pallas(
     q: jax.Array,          # [B, K, G, dh]
     k_pages: jax.Array,    # [B, K, NP, T, dh] (kv4: [B, K, NP, T/2, dh])

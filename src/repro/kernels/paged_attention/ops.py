@@ -6,8 +6,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_attention_pallas
-from repro.kernels.paged_attention.ref import (paged_attention_partial_ref,
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_pallas, paged_attention_pallas_shared)
+from repro.kernels.paged_attention.ref import (gather_table_pages,
+                                               paged_attention_partial_ref,
                                                paged_chunk_attention_ref)
 
 
@@ -18,7 +20,7 @@ def default_impl() -> str:
 def paged_chunk_attention(q, k_pages, v_pages, page_base, start, q_pos, *,
                           window: Optional[int] = None, impl: str = "auto",
                           kv_quant: str = "none", k_scale=None,
-                          v_scale=None):
+                          v_scale=None, page_table=None):
     """Impl dispatch for the chunked-prefill past-context partial.
 
     Mirrors `paged_attention_partial` so `EngineConfig.attn_impl` stays
@@ -27,8 +29,18 @@ def paged_chunk_attention(q, k_pages, v_pages, page_base, start, q_pos, *,
     lowers to the jnp oracle, which materializes O(S·NP·T) scores per
     layer; `impl` is accepted now so call sites don't change when the
     kernel lands.
+
+    page_table: [B, NP] shared-pool indirection — k/v_pages (and scales)
+    are then the GLOBAL [K, P_total, ...] pool and the slot's pages are
+    gathered through the table before the oracle runs.
     """
     del impl                      # single implementation today (see above)
+    if page_table is not None:
+        k_pages = gather_table_pages(k_pages, page_table)
+        v_pages = gather_table_pages(v_pages, page_table)
+        if kv_quant != "none":
+            k_scale = gather_table_pages(k_scale, page_table)
+            v_scale = gather_table_pages(v_scale, page_table)
     return paged_chunk_attention_ref(
         q, k_pages, v_pages, page_base, start, q_pos, window=window,
         kv_quant=kv_quant, k_scale=k_scale, v_scale=v_scale)
@@ -48,20 +60,43 @@ def paged_attention_partial(
     kv_quant: str = "none",
     k_scale: Optional[jax.Array] = None,   # [B, K, NP] per-page×head scales
     v_scale: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,  # [B, NP] shared-pool tables
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (ō [B,H,dh] locally normalized, m [B,H], ℓ [B,H])."""
+    """Returns (ō [B,H,dh] locally normalized, m [B,H], ℓ [B,H]).
+
+    With `page_table`, k/v_pages (and scales) are the shared GLOBAL pool
+    [K, P_total, ...]: the ref path gathers the slot's stripe view through
+    the table; the Pallas path scalar-prefetches the table and lets the
+    block index map address the P_total axis directly (no gather).
+    """
     if impl == "auto":
         impl = default_impl()
+    B, H, dh = q.shape
+    K = k_pages.shape[0] if page_table is not None else k_pages.shape[1]
+    G = H // K
     if impl == "ref" or is_global is not None:
         # dynamic local/global flags (scanned layers) take the jnp path
+        if page_table is not None:
+            k_pages = gather_table_pages(k_pages, page_table)
+            v_pages = gather_table_pages(v_pages, page_table)
+            if kv_quant != "none":
+                k_scale = gather_table_pages(k_scale, page_table)
+                v_scale = gather_table_pages(v_scale, page_table)
         return paged_attention_partial_ref(
             q, k_pages, v_pages, page_base, length,
             window=window, is_global=is_global, kv_quant=kv_quant,
             k_scale=k_scale, v_scale=v_scale)
 
-    B, H, dh = q.shape
-    K = k_pages.shape[1]
-    G = H // K
+    if page_table is not None:
+        o, m, l = paged_attention_pallas_shared(
+            q.reshape(B, K, G, dh), k_pages, v_pages,
+            page_table.astype(jnp.int32), page_base.astype(jnp.int32),
+            length.astype(jnp.int32), window=window,
+            interpret=(impl == "interpret"),
+            kv_quant=kv_quant, k_scale=k_scale, v_scale=v_scale)
+        return (o.reshape(B, H, dh).astype(q.dtype),
+                m.reshape(B, H), l.reshape(B, H))
+
     ppb = pages_per_block
     NP = k_pages.shape[2]
     while NP % ppb:

@@ -152,6 +152,19 @@ def paged_chunk_attention_ref(
             l.transpose(0, 3, 1, 2).reshape(B, S, H))
 
 
+def gather_table_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Shared-pool view: gather each slot's pages through its table.
+
+    pages: [K, P_total, ...] pool (code pages [K, P, Ts, dh] or scales
+    [K, P]); page_table: [B, NP] physical indices.  Returns the per-slot
+    stripe view [B, K, NP, ...] the stripe-layout oracle consumes — the
+    correctness reference for the Pallas kernel's table-indexed block maps
+    (which stream pages directly from the pool and never materialize this
+    gather).
+    """
+    return jnp.moveaxis(jnp.take(pages, page_table, axis=1), 1, 0)
+
+
 def paged_to_dense(k_pages, page_base, max_len: int):
     """Test helper: reassemble [B, S, K, dh] from pages by position."""
     B, K, NP, T, dh = k_pages.shape

@@ -38,17 +38,28 @@ def serve(argv=None):
                     help="prefill chunk size (multiple of page_tokens)")
     ap.add_argument("--use-dse", action="store_true",
                     help="pick variant/quant from the Track-A DSE")
+    ap.add_argument("--shared-pool", action="store_true",
+                    help="shared-pool paged KV (§IV-D FTL mapping): one "
+                    "physical page pool, admission by free pages, "
+                    "prefix-cache sharing with COW")
+    ap.add_argument("--total-pages", type=int, default=0,
+                    help="shared-pool size in pages (0: slots × pages "
+                    "per max_context — byte parity with the stripes)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
+    pool_kw = dict(shared_pool=args.shared_pool,
+                   total_pages=args.total_pages)
     if args.use_dse:
         eng = recommend_engine_config(args.arch, args.max_context)
         eng = EngineConfig(**{**eng.__dict__, "page_tokens": 16,
-                              "uniform_lengths": False, "quant": "none"})
+                              "uniform_lengths": False, "quant": "none",
+                              **pool_kw})
         print(f"[serve] DSE picked variant={eng.variant} "
               f"kv_quant={eng.kv_quant}")
     else:
-        eng = EngineConfig(page_tokens=16, uniform_lengths=False)
+        eng = EngineConfig(page_tokens=16, uniform_lengths=False,
+                           **pool_kw)
     if args.reduced:
         cfg = cfg.reduced()
     model = Model(cfg, Runtime())
@@ -77,6 +88,12 @@ def serve(argv=None):
           f"{st['prefill_chunks']} prefill chunks, {st['compiles']} "
           f"compiles, {st['decode_stall_tokens']} decode-stall tokens "
           f"over {st['admits']} admits")
+    if args.shared_pool and st["pool_total_pages"]:
+        hit_rate = st["prefix_hit_pages"] / max(st["prompt_pages"], 1)
+        print(f"[serve] shared pool: peak {st['pool_peak_pages']}/"
+              f"{st['pool_total_pages']} pages live, "
+              f"{hit_rate:.0%} prompt pages from prefix cache, "
+              f"{st['cow_copies']} COW copies")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: {len(done[uid].output)} tokens -> "
               f"{done[uid].output[:8]}...")

@@ -86,7 +86,12 @@ def cache_shardings(cache, mesh: Mesh, plan: ShardPlan):
         "page_table_g": P(b, None),
         "k_pages_w": P(None, b, None, pw, None, None),
         "v_pages_w": P(None, b, None, pw, None, None),
+        "page_table_w": P(b, None),
         "page_pos_w": P(b, None),
+        "k_scale_g": P(None, b, None, pg),
+        "v_scale_g": P(None, b, None, pg),
+        "k_scale_w": P(None, b, None, pw),
+        "v_scale_w": P(None, b, None, pw),
         "rwkv_state": P(None, b, None, None, None),
         "rwkv_shift": P(None, b, None),
         "rwkv_shift2": P(None, b, None),
@@ -96,11 +101,28 @@ def cache_shardings(cache, mesh: Mesh, plan: ShardPlan):
         "cross_v": P(None, b, "model", None, None),
         "lengths": P(b),
     }
+    # shared-pool leaves drop the batch dim (EngineConfig.shared_pool):
+    # the physical page axis carries the page sharding instead
+    shared_specs = {
+        "k_pages_g": P(None, None, pg, None, None),
+        "v_pages_g": P(None, None, pg, None, None),
+        "k_pages_w": P(None, None, pw, None, None),
+        "v_pages_w": P(None, None, pw, None, None),
+        "k_scale_g": P(None, None, pg),
+        "v_scale_g": P(None, None, pg),
+        "k_scale_w": P(None, None, pw),
+        "v_scale_w": P(None, None, pw),
+    }
     kw = {}
     for f in dataclasses.fields(cache):
         leaf = getattr(cache, f.name)
-        kw[f.name] = (NamedSharding(mesh, field_specs[f.name])
-                      if leaf is not None else None)
+        if leaf is None:
+            kw[f.name] = None
+            continue
+        spec = field_specs[f.name]
+        if len(spec) != leaf.ndim:
+            spec = shared_specs[f.name]
+        kw[f.name] = NamedSharding(mesh, spec)
     return type(cache)(**kw)
 
 

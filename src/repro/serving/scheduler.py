@@ -26,22 +26,51 @@ Chunked prefill interleaved with batched decode:
     access-aware reuse story of §IV-D); the next occupant's first chunk
     rewrites the window-ring base row, so stale pages can never alias.
 
+Shared-pool mode (``EngineConfig.shared_pool``, the §IV-D FTL mapping
+proper) replaces the per-slot stripes with ONE physical page pool per
+layer-group and moves allocation policy to this host scheduler:
+
+  * admission is by FREE-PAGE COUNT, not free slots: a request is admitted
+    when its worst-case footprint ceil((prompt + max_new)/T) pages (plus a
+    window-ring allocation for local-attention archs) fits the pool's
+    free + cache-evictable pages net of outstanding reservations — so many
+    short requests share a pool that could hold only a few max_context
+    stripes;
+  * global-pool pages are allocated LAZILY as prefill chunks and decode
+    appends land; window-ring pages are allocated eagerly at admission
+    (the ring is bounded and recycled in place);
+  * a radix-style PREFIX CACHE (`core/page_alloc.PrefixCache`) maps a new
+    prompt's already-computed full-page prefixes read-only into its table
+    (refcount++), and whole-prompt repeats skip prefill entirely (cached
+    last-token logits); the first DECODE append into a shared partial
+    page triggers COPY-ON-WRITE — the allocator hands the slot a private
+    page, the device copies the page bytes, and the table repoints;
+  * completion decrements refcounts and returns exclusive pages to the
+    free list; pages referenced by the prefix cache survive until LRU
+    eviction reclaims them under pressure.
+
 `SpliceBatcher` keeps the old admit-time full prefill + jit'd slot splice
 as the measured baseline (benchmarks/serving_bench.py) and for parity
-tests; the interleaved step never touches the splice path.
+tests; the interleaved step never touches the splice path.  The splice
+operation is meaningless against a shared pool (a B=1 cache owns a
+different pool, and slot stripes no longer exist), so SpliceBatcher
+fails fast when handed a shared-pool EngineConfig.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import EngineConfig, ModelConfig
+from repro.core import paged_kv
 from repro.core.engine import KVNANDEngine
+from repro.core.page_alloc import (CacheHit, OutOfPages, PageAllocator,
+                                   PrefixCache)
 from repro.models.transformer import Runtime
 from repro.serving.sampler import sample
 
@@ -123,6 +152,10 @@ class ContinuousBatcher:
         self._lengths = np.zeros(batch_slots, np.int64)
         self._prefill_live: Dict[int, _PrefillState] = {}
         self._admit_seq = 0
+        self.shared = eng.shared_pool
+        self.alloc: Optional[PageAllocator] = None
+        self.alloc_w: Optional[PageAllocator] = None
+        self.prefix_cache: Optional[PrefixCache] = None
         self._decode = jax.jit(
             lambda p, c, t, a: self.engine.decode_step(p, c, t, active=a),
             donate_argnums=(1,))
@@ -137,8 +170,167 @@ class ContinuousBatcher:
         self.completed: Dict[int, Request] = {}
         self.stats = {"steps": 0, "admits": 0, "prefill_chunks": 0,
                       "decode_tokens": 0, "decode_stall_tokens": 0,
-                      "compiles": 0}
+                      "compiles": 0, "prefix_hit_pages": 0,
+                      "prompt_pages": 0, "cow_copies": 0,
+                      "pool_peak_pages": 0, "pool_total_pages": 0}
         self._compile_keys = set()
+        if self.shared:
+            self._init_shared_pool(eng)
+
+    # -- shared-pool bookkeeping (allocator, tables, prefix cache) -----
+    def _init_shared_pool(self, eng: EngineConfig):
+        cfg, T = self.cfg, eng.page_tokens
+        c = self.cache
+        if c.k_pages_g is not None:
+            self._NPg = c.page_table_g.shape[1]
+            self.alloc = PageAllocator(c.k_pages_g.shape[2])
+            self._table_np = np.zeros((self.B, self._NPg), np.int32)
+            self.stats["pool_total_pages"] = self.alloc.total
+        if c.k_pages_w is not None:
+            self._NPw = c.page_table_w.shape[1]
+            self.alloc_w = PageAllocator(c.k_pages_w.shape[2])
+            self._table_w_np = np.zeros((self.B, self._NPw), np.int32)
+        # per-slot maps: logical page -> physical; shared = mapped with
+        # refcount > 1 (read-only until COW); ring pages owned outright
+        self._slot_pages: List[Dict[int, int]] = [dict()
+                                                  for _ in range(self.B)]
+        self._slot_shared: List[Set[int]] = [set() for _ in range(self.B)]
+        self._slot_ring: List[List[int]] = [[] for _ in range(self.B)]
+        self._resv = np.zeros(self.B, np.int64)   # reserved, not yet alloc'd
+        self._outstanding = 0
+        # prefix sharing needs a pure global-pool arch with no frontend
+        # prefix and no recurrent state (window rings recycle pages; meta
+        # tokens shift page alignment; ssm/hybrid carry state)
+        if (self.alloc is not None and self.alloc_w is None
+                and not self._whole_prompt and self._prefix == 0
+                and not cfg.is_encoder_decoder):
+            self.prefix_cache = PrefixCache(self.alloc, T)
+        self._tables_dirty = True
+        self._push_tables()
+
+        def cow_copy(cache, src, dst):
+            upd = {}
+            for name in ("k_pages_g", "v_pages_g", "k_scale_g",
+                         "v_scale_g"):
+                leaf = getattr(cache, name)
+                if leaf is not None:
+                    upd[name] = paged_kv.copy_page_shared(leaf, src, dst)
+            return dataclasses.replace(cache, **upd)
+
+        self._cow_jit = jax.jit(cow_copy, donate_argnums=(0,))
+
+    def _push_tables(self):
+        """Mirror the host page tables into the device cache leaves (only
+        when a mapping actually changed — steady-state decode steps that
+        stay inside a page skip the upload entirely)."""
+        if not self._tables_dirty:
+            return
+        upd = {}
+        if self.alloc is not None:
+            upd["page_table_g"] = jnp.asarray(self._table_np)
+        if self.alloc_w is not None:
+            upd["page_table_w"] = jnp.asarray(self._table_w_np)
+        if upd:
+            self.cache = dataclasses.replace(self.cache, **upd)
+        self._tables_dirty = False
+
+    def _alloc_g(self, logical: int) -> int:
+        """One global-pool page, evicting prefix-cache LRU entries under
+        pressure (their pages are the only reclaimable slack)."""
+        while True:
+            try:
+                p = self.alloc.alloc_for_logical(logical)
+                self.stats["pool_peak_pages"] = max(
+                    self.stats["pool_peak_pages"], self.alloc.live_count)
+                return p
+            except OutOfPages:
+                if self.prefix_cache is None or \
+                        not self.prefix_cache.evict_lru():
+                    raise RuntimeError(
+                        "shared page pool exhausted despite admission "
+                        "reservations — allocator accounting bug") from None
+
+    def _ensure_page(self, i: int, lp: int):
+        """Slot i is about to WRITE logical page lp: allocate it fresh if
+        unmapped, COW it if currently shared (refcount > 1)."""
+        pages = self._slot_pages[i]
+        if lp not in pages:
+            p = self._alloc_g(lp)
+            pages[lp] = p
+            self._table_np[i, lp] = p
+            self._tables_dirty = True
+            self._resv[i] -= 1
+            self._outstanding -= 1
+            return
+        if lp in self._slot_shared[i]:
+            old = pages[lp]
+            fresh = self.alloc.cow(old)
+            if fresh != old:
+                self._count_compile("cow")
+                self.cache = self._cow_jit(self.cache,
+                                           jnp.asarray(old, jnp.int32),
+                                           jnp.asarray(fresh, jnp.int32))
+                pages[lp] = fresh
+                self._table_np[i, lp] = fresh
+                self._tables_dirty = True
+                self.stats["cow_copies"] += 1
+                self._resv[i] -= 1
+                self._outstanding -= 1
+            self._slot_shared[i].discard(lp)
+            self.stats["pool_peak_pages"] = max(
+                self.stats["pool_peak_pages"], self.alloc.live_count)
+
+    def _free_slot_pages(self, i: int):
+        if not self.shared:
+            return
+        if self.alloc is not None and self._slot_pages[i]:
+            self.alloc.free(list(self._slot_pages[i].values()))
+        if self.alloc_w is not None and self._slot_ring[i]:
+            self.alloc_w.free(self._slot_ring[i])
+        self._slot_pages[i] = {}
+        self._slot_shared[i] = set()
+        self._slot_ring[i] = []
+        self._outstanding -= int(self._resv[i])
+        self._resv[i] = 0
+
+    def _pages_needed(self, req: Request) -> int:
+        total = min(self._prefix + len(req.prompt) + req.max_new,
+                    self.max_context)
+        return -(-total // self.engine.eng.page_tokens)
+
+    def _map_cached_pages(self, i: int, pages) -> int:
+        """Map cached pages read-only into slot i's logical pages 0..len:
+        one allocator reference each, marked shared (COW before write)."""
+        for j, p in enumerate(pages):
+            self.alloc.share([p])
+            self._slot_pages[i][j] = p
+            self._slot_shared[i].add(j)
+            self._table_np[i, j] = p
+        return len(pages)
+
+    def _register_prefix(self, i: int, ps: _PrefillState,
+                         logits: np.ndarray):
+        """Publish a freshly prefilled prompt's pages into the prefix
+        cache.  Full pages are always safe to share (the slot never
+        rewrites them).  The trailing PARTIAL page becomes shared too —
+        making this slot's own first decode append copy-on-write it — but
+        only when the pool has a free page of slack to fund that copy
+        (the reservation grows by one to keep admission accounting
+        exact)."""
+        T = self.engine.eng.page_tokens
+        n_pages = -(-ps.n // T)
+        pages = [self._slot_pages[i][j] for j in range(n_pages)]
+        partial = ps.n % T != 0
+        slack = self.alloc.free_count - self._outstanding
+        include_exact = (not partial) or slack >= 1
+        added = self.prefix_cache.register(
+            ps.req.prompt, pages, logits, include_exact=include_exact)
+        if added and partial and include_exact:
+            self._resv[i] += 1
+            self._outstanding += 1
+        for j, p in enumerate(pages):
+            if self.alloc.refcount[p] > 1:
+                self._slot_shared[i].add(j)
 
     # -- host-side slot management ------------------------------------
     def _count_compile(self, name, *key):
@@ -159,24 +351,111 @@ class ContinuousBatcher:
                 f"capacity of {cap} (max_context={self.max_context} minus "
                 f"1 decode token minus {self._prefix} prefix tokens); "
                 "truncate the prompt or enlarge max_context")
+        if self.shared and self.alloc is not None:
+            need = self._pages_needed(req)
+            if need > self.alloc.total:
+                raise ValueError(
+                    f"request {req.uid}: worst-case footprint of {need} "
+                    f"pages exceeds the shared pool of "
+                    f"{self.alloc.total} pages; shrink the prompt/max_new "
+                    "or grow EngineConfig.total_pages")
         self.queue.append(req)
 
     def _admit(self):
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
+                if self.shared:
+                    if not self._admit_shared(i):
+                        break          # FIFO head waits for pages
+                    continue
                 req = self.queue.popleft()
                 self.slots[i] = req
-                n = len(req.prompt)
-                if self._whole_prompt:
-                    toks = np.asarray(req.prompt, np.int32)
-                else:
-                    C = self.chunk_tokens
-                    toks = np.zeros(-(-n // C) * C, np.int32)
-                    toks[:n] = req.prompt
-                self._prefill_live[i] = _PrefillState(
-                    req, toks, n, order=self._admit_seq)
-                self._admit_seq += 1
+                self._start_prefill(i, req)
                 self.stats["admits"] += 1
+
+    def _start_prefill(self, i: int, req: Request, pos: int = 0):
+        n = len(req.prompt)
+        if self._whole_prompt:
+            toks = np.asarray(req.prompt, np.int32)
+        else:
+            C = self.chunk_tokens
+            toks = np.zeros(-(-n // C) * C, np.int32)
+            toks[:n] = req.prompt
+        self._prefill_live[i] = _PrefillState(
+            req, toks, n, pos=pos, order=self._admit_seq)
+        self._admit_seq += 1
+
+    def _admit_shared(self, i: int) -> bool:
+        """Admission by KV footprint: reserve the request's worst-case
+        pages against the pool; map any cached prefix read-only; admit
+        only if the remainder fits free + evictable pages."""
+        req = self.queue[0]
+        n = len(req.prompt)
+        T = self.engine.eng.page_tokens
+        need_g = self._pages_needed(req) if self.alloc is not None else 0
+        need_w = 0
+        if self.alloc_w is not None:
+            total = min(self._prefix + n + req.max_new, self.max_context)
+            need_w = min(-(-total // T), self._NPw)
+        hit = CacheHit()
+        if self.prefix_cache is not None:
+            hit = self.prefix_cache.lookup(req.prompt)
+        if self.alloc is not None:
+            hit_pages = (hit.exact.pages if hit.exact is not None
+                         else hit.full_pages)
+            evictable = (self.prefix_cache.evictable_pages()
+                         if self.prefix_cache is not None else 0)
+            # mapping the hit PINS its pages: whatever part of `evictable`
+            # they are stops being reclaimable the moment this request is
+            # admitted, so discount them all (conservative — some may
+            # already be pinned by another slot)
+            avail = (self.alloc.free_count
+                     + max(0, evictable - len(hit_pages))
+                     - self._outstanding)
+            # fresh pages this slot may still allocate: decode growth,
+            # plus the COW of an exact hit's shared partial page
+            resv_needed = need_g - (n // T if hit.exact is not None
+                                    else len(hit.full_pages))
+            if resv_needed > avail:
+                return False
+        if self.alloc_w is not None and need_w > self.alloc_w.free_count:
+            return False
+
+        self.queue.popleft()
+        self.slots[i] = req
+        self.stats["admits"] += 1
+        self.stats["prompt_pages"] += -(-n // T)
+        # eager window-ring allocation (bounded, recycled in place)
+        if self.alloc_w is not None:
+            for j in range(need_w):
+                p = self.alloc_w.alloc_for_logical(j)
+                self._slot_ring[i].append(p)
+                self._table_w_np[i, j] = p
+            self._tables_dirty = self._tables_dirty or need_w > 0
+        if hit.exact is not None:
+            # whole-prompt repeat: map EVERY page (incl. the trailing
+            # partial one) read-only and skip prefill; the first decode
+            # append into the partial page copy-on-writes it
+            mapped = self._map_cached_pages(i, hit.exact.pages)
+            self._resv[i] = need_g - (n // T)   # partial page may COW
+            self._lengths[i] = n
+            self.cache = dataclasses.replace(
+                self.cache,
+                lengths=self.cache.lengths.at[i].set(n))
+            self.rng, key = jax.random.split(self.rng)
+            tok = int(sample(jnp.asarray(hit.exact.logits)[None], key,
+                             true_vocab=self.cfg.vocab_size,
+                             temperature=self.temperature)[0])
+            req.output.append(tok)
+        else:
+            mapped = self._map_cached_pages(i, hit.full_pages)
+            self._resv[i] = need_g - mapped     # full pages never rewritten
+            self._start_prefill(i, req, pos=mapped * T)
+        self._outstanding += int(self._resv[i])
+        self.stats["prefix_hit_pages"] += mapped
+        self._tables_dirty = self._tables_dirty or mapped > 0
+        self._push_tables()
+        return True
 
     def _prefill_tick(self, i: int, ps: _PrefillState):
         """Process ONE chunk of slot i's prompt into the shared cache."""
@@ -186,6 +465,14 @@ class ContinuousBatcher:
             c0 = ps.pos
             chunk, cl = ps.tokens[c0:c0 + self.chunk_tokens], \
                 min(self.chunk_tokens, ps.n - c0)
+        if self.shared:
+            # lazy page allocation: back every page this chunk will write
+            T = self.engine.eng.page_tokens
+            span = c0 + cl + (self._prefix if c0 == 0 else 0)
+            if self.alloc is not None:
+                for lp in range(c0 // T, -(-span // T)):
+                    self._ensure_page(i, lp)
+            self._push_tables()
         fn = self._chunk_first if c0 == 0 else self._chunk_cont
         self._count_compile("chunk", c0 == 0, len(chunk))
         logits, self.cache = fn(
@@ -197,6 +484,8 @@ class ContinuousBatcher:
         if ps.pos >= ps.n:                         # prompt fully prefilled
             del self._prefill_live[i]
             self._lengths[i] = self._prefix + ps.n
+            if self.prefix_cache is not None:
+                self._register_prefix(i, ps, np.asarray(logits[0]))
             self.rng, k = jax.random.split(self.rng)
             tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
                              temperature=self.temperature)[0])
@@ -239,6 +528,14 @@ class ContinuousBatcher:
         for i in active:
             tokens[i, 0] = self.slots[i].output[-1]
             mask[i] = True
+        if self.shared and self.alloc is not None:
+            # every active slot appends at its current position: make that
+            # page exclusively writable (lazy alloc, or COW off a shared
+            # prefix/partial page) before the jitted step runs
+            T = self.engine.eng.page_tokens
+            for i in active:
+                self._ensure_page(i, int(self._lengths[i]) // T)
+            self._push_tables()
         self._count_compile("decode", self.B)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tokens),
@@ -257,6 +554,7 @@ class ContinuousBatcher:
                 self.completed[req.uid] = req
                 self.slots[i] = None          # slot pages recycled in place
                 self._lengths[i] = 0
+                self._free_slot_pages(i)      # shared pool: refcount--
         return len(active)
 
     def run_to_completion(self, max_steps: int = 10_000):
@@ -284,6 +582,13 @@ class SpliceBatcher(ContinuousBatcher):
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
+        if self.shared:
+            raise ValueError(
+                "SpliceBatcher is the stripe-layout baseline: a shared "
+                "pool has no per-slot stripe to splice into (a B=1 "
+                "prefill cache owns a different pool entirely); use "
+                "ContinuousBatcher with shared_pool=True, or the stripe "
+                "layout for splice-baseline measurements")
         max_context = self.max_context
         self._prefill1 = jax.jit(
             lambda p, b: self.engine.prefill(p, b, max_context))
@@ -344,7 +649,7 @@ class SpliceBatcher(ContinuousBatcher):
         return decoded
 
 
-_BATCH_AXIS0 = ("page_table_g", "page_pos_w", "lengths")
+_BATCH_AXIS0 = ("page_table_g", "page_table_w", "page_pos_w", "lengths")
 
 
 def _splice_slot(cache, one, i):

@@ -327,3 +327,50 @@ np.testing.assert_allclose(np.asarray(lg1), np.asarray(lgN),
                            atol=5e-4, rtol=5e-4)
 print("sharded prefill_chunk == single device OK")
 """, timeout=900)
+
+
+@pytest.mark.slow
+def test_shared_pool_sharded_decode_and_append():
+    """Shared-pool P_total sharded over `model`: table-walked partial
+    attention + owning-shard appends match the single-device oracle."""
+    run_multidevice(COMMON + """
+from repro.core import seqpar
+from repro.kernels.paged_attention import paged_attention_partial
+B, K, G, NP, T, dh, L = 4, 2, 3, 8, 16, 32, 2
+P = B * NP
+H = K * G
+ks = jax.random.split(jax.random.PRNGKey(5), 4)
+pool_k = jax.random.normal(ks[0], (K, P, T, dh))
+pool_v = jax.random.normal(ks[1], (K, P, T, dh))
+q = jax.random.normal(ks[2], (B, H, dh))
+table = jnp.asarray(np.random.default_rng(3).permutation(P).reshape(B, NP),
+                    jnp.int32)
+base = jnp.broadcast_to((jnp.arange(NP) * T)[None], (B, NP)).astype(jnp.int32)
+length = jnp.array([7, 33, 64, 128], jnp.int32)
+ref, _, _ = paged_attention_partial(q, pool_k, pool_v, base, length,
+                                    impl="ref", page_table=table)
+with mesh:
+    out = jax.jit(lambda q, kp, vp, tbl, b, ln:
+                  seqpar.paged_decode_attention_sharded_shared(
+                      q, kp, vp, tbl, b, ln, mesh, batch_axes=("data",),
+                      page_axes=("model",), impl="ref"))(
+        q, pool_k, pool_v, table, base, length)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                           atol=3e-5, rtol=3e-5)
+pools_k = jnp.zeros((L, K, P, T, dh))
+pools_v = jnp.zeros((L, K, P, T, dh))
+phys = jnp.array([3, 11, 19, 30], jnp.int32)
+slot = jnp.array([0, 5, 15, 2], jnp.int32)
+kn = jax.random.normal(ks[3], (B, K, dh))
+with mesh:
+    ok, ov = jax.jit(lambda kp, vp, kn, vn, ph, sl:
+                     seqpar.sharded_append_shared(
+                         kp, vp, 1, kn, vn, ph, sl, mesh,
+                         batch_axes=("data",), page_axes=("model",)))(
+        pools_k, pools_v, kn, -kn, phys, slot)
+for b_ in range(B):
+    np.testing.assert_allclose(np.asarray(ok[1, :, phys[b_], slot[b_]]),
+                               np.asarray(kn[b_]), atol=1e-6)
+assert float(jnp.abs(ok[0]).max()) == 0.0
+print("shared-pool sharded OK")
+""")
