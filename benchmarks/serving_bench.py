@@ -1,5 +1,6 @@
 """Serving-scheduler benchmark: interleaved chunked prefill vs the splice
-baseline, plus the shared-pool allocator (FTL-mapped paged KV, §IV-D).
+baseline, plus the shared-pool allocator (FTL-mapped paged KV, §IV-D),
+all driven through the request-centric `KVNANDServer` facade.
 
 Runs the same request trace through three schedulers on the reduced
 config and emits, per scheduler:
@@ -10,6 +11,10 @@ config and emits, per scheduler:
   serving/<mode>/decode_stall_per_admit
         decode tokens NOT generated while an admit monopolized the engine
         (0 by construction for the interleaved schedulers).
+  serving/<mode>/ttft_p50, ttft_p95   time to first token (µs), from
+  serving/<mode>/tpot_p50, tpot_p95   RequestOutput timing; TPOT = mean
+        per-token time after the first.  p95 TTFT lands on the requests
+        that pay the jit compiles (fresh server per drain).
 
 Shared-pool trajectory metrics (the allocator's capacity win):
 
@@ -22,9 +27,10 @@ Shared-pool trajectory metrics (the allocator's capacity win):
         > 1 means the mix could NOT have been admitted under the old
         per-slot stripe layout, yet the pooled allocator drains it.
 
-`wall` and `steps_to_drain` rows are gated by check_regression.py;
-counter rows carry the count in `us_per_call` (the harness's one numeric
-column) with the unit spelled out in `derived`.
+`wall`, `steps_to_drain`, and the ttft/tpot p50 rows are gated by
+check_regression.py (p95 rows are informational — compile-dominated);
+counter rows carry the count in `us_per_call` (the harness's one
+numeric column) with the unit spelled out in `derived`.
 """
 import time
 
@@ -56,26 +62,40 @@ def _prefix_trace(vocab):
     return [sysp + t for t in tails] + [sysp + tails[0]]
 
 
-def _drain(cls, cfg, params, eng, prompts, *, slots=SLOTS,
+def _drain(scheduler, cfg, params, eng, prompts, *, slots=SLOTS,
            max_context=MAX_CONTEXT):
-    from repro.serving.scheduler import Request
+    from repro.serving.api import (KVNANDServer, SamplingParams,
+                                   ServerConfig)
 
-    b = cls(cfg, params, batch_slots=slots, max_context=max_context,
-            temperature=0.0, eng=eng, prefill_chunk_tokens=CHUNK)
-    for uid, p in enumerate(prompts):
-        b.submit(Request(uid, list(p), max_new=MAX_NEW))
+    server = KVNANDServer(
+        ServerConfig(scheduler=scheduler, engine=eng, batch_slots=slots,
+                     max_context=max_context,
+                     prefill_chunk_tokens=CHUNK),
+        cfg=cfg, params=params)
+    sp = SamplingParams(max_new_tokens=MAX_NEW)
     t0 = time.perf_counter()
-    done = b.run_to_completion()
+    outs = server.generate(prompts, sp)
     dt = time.perf_counter() - t0
-    total = sum(len(r.output) for r in done.values())
-    return dt, total, b.stats, {u: r.output for u, r in done.items()}
+    total = sum(len(o.token_ids) for o in outs)
+    return dt, total, server.stats, {o.uid: o.token_ids for o in outs}, \
+        outs
+
+
+def _emit_latency(mode, outs):
+    from repro.serving.api import latency_percentile
+    for name, sel in (("ttft", lambda o: o.ttft),
+                      ("tpot", lambda o: o.tpot)):
+        vals = [sel(o) for o in outs if sel(o) is not None]
+        for q in (50, 95):
+            emit(f"serving/{mode}/{name}_p{q}",
+                 latency_percentile(vals, q) * 1e6,
+                 f"us {name} p{q} over {len(vals)} requests")
 
 
 def run():
     from repro.configs import EngineConfig, get_config
     from repro.models.registry import Model
     from repro.models.transformer import Runtime
-    from repro.serving.scheduler import ContinuousBatcher, SpliceBatcher
 
     cfg = get_config(ARCH).reduced()
     params = Model(cfg, Runtime()).init(jax.random.PRNGKey(0))
@@ -85,10 +105,11 @@ def run():
     prompts = _trace(cfg.vocab_size)
 
     outs = {}
-    for mode, cls, eng in (("splice", SpliceBatcher, stripe),
-                           ("interleaved", ContinuousBatcher, stripe),
-                           ("shared", ContinuousBatcher, shared)):
-        dt, total, st, outs[mode] = _drain(cls, cfg, params, eng, prompts)
+    for mode, sched, eng in (("splice", "splice", stripe),
+                             ("interleaved", "interleaved", stripe),
+                             ("shared", "interleaved", shared)):
+        dt, total, st, outs[mode], ro = _drain(sched, cfg, params, eng,
+                                               prompts)
         stall = st["decode_stall_tokens"] / max(st["admits"], 1)
         emit(f"serving/{mode}/wall", dt * 1e6,
              f"{total / dt:.1f} tok/s cpu ({total} tokens)")
@@ -99,6 +120,7 @@ def run():
         emit(f"serving/{mode}/decode_stall_per_admit", stall,
              f"decode tokens stalled per admit "
              f"({st['decode_stall_tokens']} over {st['admits']} admits)")
+        _emit_latency(mode, ro)
         if mode == "shared":
             util = st["pool_peak_pages"] / max(st["pool_total_pages"], 1)
             emit("serving/shared/pool_util", util * 100.0,
@@ -111,10 +133,10 @@ def run():
 
     # prefix sharing: shared system prompt -> cached pages served
     pprompts = _prefix_trace(cfg.vocab_size)
-    _, _, st_ref, o_ref = _drain(ContinuousBatcher, cfg, params, stripe,
-                                 pprompts)
-    dt, total, st, o_shared = _drain(ContinuousBatcher, cfg, params,
-                                     shared, pprompts)
+    _, _, st_ref, o_ref, _ = _drain("interleaved", cfg, params, stripe,
+                                    pprompts)
+    dt, total, st, o_shared, _ = _drain("interleaved", cfg, params,
+                                        shared, pprompts)
     if o_shared != o_ref:
         raise AssertionError("prefix-cache outputs diverged from stripe")
     hit_rate = st["prefix_hit_pages"] / max(st["prompt_pages"], 1)
@@ -130,8 +152,8 @@ def run():
     rng = np.random.default_rng(13)
     cap_prompts = [rng.integers(1, cfg.vocab_size, 11).tolist()
                    for _ in range(6)]
-    dt, total, st, o_cap = _drain(ContinuousBatcher, cfg, params, cap_eng,
-                                  cap_prompts, slots=6)
+    dt, total, st, o_cap, _ = _drain("interleaved", cfg, params, cap_eng,
+                                     cap_prompts, slots=6)
     if len(o_cap) != len(cap_prompts):
         raise AssertionError("capacity mix did not drain")
     npg = -(-MAX_CONTEXT // PAGE_TOKENS)

@@ -1,5 +1,6 @@
-"""Quickstart: train a tiny LM on synthetic data, then generate from it
-through the KVNAND paged-decode engine — the full loop in ~2 minutes on CPU.
+"""Quickstart: train a tiny LM on synthetic data, then serve it through
+the request-centric `KVNANDServer` API — the full loop in ~2 minutes on
+CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,11 +8,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import EngineConfig, get_config
-from repro.core.engine import KVNANDEngine
 from repro.data.pipeline import DataConfig, DataIterator, make_source
 from repro.models.registry import Model
 from repro.models.transformer import Runtime
-from repro.serving.sampler import sample
+from repro.serving.api import KVNANDServer, SamplingParams, ServerConfig
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_train_state, make_train_step
 
@@ -37,23 +37,23 @@ def main():
     print(f"  final loss {float(metrics['loss']):.3f} "
           f"(random = {jnp.log(cfg.vocab_size):.2f})")
 
-    # -- generate through the paged KVNAND engine ------------------------
-    engine = KVNANDEngine(cfg, EngineConfig(page_tokens=8), rt)
-    prompt = jnp.asarray([[5, 17, 42, 7]], jnp.int32)
-    logits, cache = engine.prefill(state.params, {"tokens": prompt}, 64)
-    rng = jax.random.PRNGKey(1)
-    out = []
-    tok = sample(logits, rng, true_vocab=cfg.vocab_size)
-    for _ in range(24):
-        out.append(int(tok[0]))
-        logits, cache = engine.decode_step(state.params, cache, tok[:, None])
-        rng, k = jax.random.split(rng)
-        tok = sample(logits, k, true_vocab=cfg.vocab_size)
-    print(f"generated: {out}")
+    # -- serve the trained weights through the KVNAND engine -------------
+    # KVNANDServer owns engine + scheduler construction; pass the freshly
+    # trained params instead of letting it initialize its own
+    server = KVNANDServer(
+        ServerConfig(engine=EngineConfig(page_tokens=8,
+                                         uniform_lengths=False),
+                     batch_slots=1, max_context=64),
+        cfg=cfg, params=state.params, rt=rt)
+    out = server.generate([[5, 17, 42, 7]],
+                          SamplingParams(max_new_tokens=24))[0]
+    print(f"generated ({out.finish_reason}, "
+          f"ttft {out.ttft * 1e3:.0f} ms): {out.token_ids}")
     # the synthetic stream is 80% next = perm[cur]; a trained model locks on
     src = it.source
-    follows = sum(int(src.perm[a]) == b for a, b in zip(out, out[1:]))
-    print(f"{follows}/{len(out) - 1} transitions follow the learned chain")
+    toks = out.token_ids
+    follows = sum(int(src.perm[a]) == b for a, b in zip(toks, toks[1:]))
+    print(f"{follows}/{len(toks) - 1} transitions follow the learned chain")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Serving driver: batched requests through the KVNAND engine with
-continuous batching (see serving/scheduler.py).
+"""Serving driver: batched requests through the request-centric
+`KVNANDServer` facade (serving/api.py) — per-request SamplingParams,
+streaming outputs, TTFT/TPOT reporting.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --reduced --requests 8 --max-new 16
@@ -9,15 +10,12 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import EngineConfig, get_config
+from repro.configs import EngineConfig
 from repro.core.dse import recommend_engine_config
-from repro.models.registry import Model
-from repro.models.transformer import Runtime
-from repro.serving.scheduler import (ContinuousBatcher, Request,
-                                     SpliceBatcher)
+from repro.serving.api import (KVNANDServer, SamplingParams, ServerConfig,
+                               latency_percentile)
 
 
 def serve(argv=None):
@@ -29,6 +27,11 @@ def serve(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-context", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed (bit-reproducible "
+                    "output regardless of batch composition)")
     ap.add_argument("--scheduler", choices=("interleaved", "splice"),
                     default="interleaved",
                     help="interleaved: chunked prefill shares each step "
@@ -47,7 +50,6 @@ def serve(argv=None):
                     "per max_context — byte parity with the stripes)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
     pool_kw = dict(shared_pool=args.shared_pool,
                    total_pages=args.total_pages)
     if args.use_dse:
@@ -60,44 +62,48 @@ def serve(argv=None):
     else:
         eng = EngineConfig(page_tokens=16, uniform_lengths=False,
                            **pool_kw)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = Model(cfg, Runtime())
-    params = model.init(jax.random.PRNGKey(0))
 
-    cls = ContinuousBatcher if args.scheduler == "interleaved" \
-        else SpliceBatcher
-    batcher = cls(cfg, params, batch_slots=args.slots,
-                  max_context=args.max_context, eng=eng,
-                  temperature=args.temperature,
-                  prefill_chunk_tokens=args.chunk_tokens)
+    server = KVNANDServer(ServerConfig(
+        arch=args.arch, reduced=args.reduced, engine=eng,
+        scheduler=args.scheduler, batch_slots=args.slots,
+        max_context=args.max_context,
+        prefill_chunk_tokens=args.chunk_tokens))
+    cfg = server.cfg
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed,
+                        max_new_tokens=args.max_new)
     rng = np.random.default_rng(0)
-    for uid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              int(rng.integers(4, 24))).tolist()
-        batcher.submit(Request(uid=uid, prompt=prompt,
-                               max_new=args.max_new))
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 24))).tolist()
+               for _ in range(args.requests)]
     t0 = time.time()
-    done = batcher.run_to_completion()
+    outs = server.generate(prompts, sp)
     dt = time.time() - t0
-    total_tokens = sum(len(r.output) for r in done.values())
-    st = batcher.stats
-    print(f"[serve] {len(done)} requests, {total_tokens} tokens in "
+    total_tokens = sum(len(o.token_ids) for o in outs)
+    st = server.stats
+    print(f"[serve] {len(outs)} requests, {total_tokens} tokens in "
           f"{dt:.1f}s ({total_tokens / dt:.1f} tok/s on CPU)")
     print(f"[serve] scheduler={args.scheduler}: {st['steps']} steps, "
           f"{st['prefill_chunks']} prefill chunks, {st['compiles']} "
           f"compiles, {st['decode_stall_tokens']} decode-stall tokens "
           f"over {st['admits']} admits")
+    ttfts = [o.ttft for o in outs]
+    tpots = [o.tpot for o in outs]
+    print(f"[serve] TTFT p50/p95 {latency_percentile(ttfts, 50) * 1e3:.0f}/"
+          f"{latency_percentile(ttfts, 95) * 1e3:.0f} ms, "
+          f"TPOT p50/p95 {latency_percentile(tpots, 50) * 1e3:.0f}/"
+          f"{latency_percentile(tpots, 95) * 1e3:.0f} ms "
+          "(CPU; first requests carry jit compiles)")
     if args.shared_pool and st["pool_total_pages"]:
         hit_rate = st["prefix_hit_pages"] / max(st["prompt_pages"], 1)
         print(f"[serve] shared pool: peak {st['pool_peak_pages']}/"
               f"{st['pool_total_pages']} pages live, "
               f"{hit_rate:.0%} prompt pages from prefix cache, "
               f"{st['cow_copies']} COW copies")
-    for uid in sorted(done)[:3]:
-        print(f"  req {uid}: {len(done[uid].output)} tokens -> "
-              f"{done[uid].output[:8]}...")
-    return done
+    for o in outs[:3]:
+        print(f"  req {o.uid}: {len(o.token_ids)} tokens "
+              f"({o.finish_reason}) -> {o.token_ids[:8]}...")
+    return {o.uid: o for o in outs}
 
 
 if __name__ == "__main__":

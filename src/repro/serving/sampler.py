@@ -1,22 +1,171 @@
-"""Token sampling: greedy / temperature / top-k (vocab-mask aware)."""
+"""Vectorized token sampling: per-ROW greedy / temperature / top-k /
+top-p over a batch, with per-request PRNG streams.
+
+Every knob (`temperature`, `top_k`, `top_p`) can be a scalar or a
+per-row `[B]` array, so a mixed-params decode batch — greedy rows next
+to hot-temperature nucleus rows — runs as ONE traced computation: the
+serving scheduler passes the per-slot arrays straight into its jitted
+decode step, and a new combination of request params never costs a
+recompile.
+
+Randomness is the exponential-race (Gumbel-argmax) form of categorical
+sampling, drawn per row from that row's own key (`request_keys`: fold
+``(seed, position)`` into a stream).  A request's tokens therefore
+depend only on its own `(seed, position)` pairs — never on batch
+composition, admission order, or a batcher-global RNG — which is what
+makes seeded requests bit-reproducible across schedulers.  With a single
+(legacy) key the draw degrades to `jax.random.categorical`'s exact
+stream, so pre-existing call sites keep their token sequences.
+
+`SamplingParams` lives here (not in `serving/api.py`) so the scheduler
+can consume it without a circular import; the API facade re-exports it.
+"""
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+NEG = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (the public serving surface).
+
+    temperature <= 0 is greedy (argmax); `top_k=0` / `top_p=1.0` disable
+    their filters.  `seed=None` derives a per-request stream from the
+    server seed and the request uid; an explicit seed makes the output
+    bit-reproducible regardless of batch composition or scheduler.
+    `stop_token_ids`: generation finishes (reason ``"stop"``) the step a
+    listed id is sampled; the stop token IS included in the output.
+    `logprobs=True` records the log-probability (from the raw, pad-masked
+    distribution — independent of temperature/filters) of each sampled
+    token.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    max_new_tokens: int = 16
+    stop_token_ids: Tuple[int, ...] = ()
+    logprobs: bool = False
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables), "
+                             f"got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {self.max_new_tokens}")
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+
+def request_keys(seeds: jax.Array, positions: jax.Array) -> jax.Array:
+    """Per-request PRNG streams: row i's key is
+    ``fold_in(PRNGKey(seeds[i]), positions[i])`` — a pure function of the
+    request's seed and how many tokens it has emitted, so the stream is
+    identical whatever batch the request happens to share.  Traceable
+    (used inside the scheduler's jitted decode step)."""
+    def one(s, p):
+        return jax.random.fold_in(jax.random.PRNGKey(s), p)
+    return jax.vmap(one)(jnp.asarray(seeds, jnp.uint32),
+                         jnp.asarray(positions, jnp.int32))
+
+
+def _noise(rng: jax.Array, shape) -> jax.Array:
+    """Gumbel noise: per-row draws for batched `[B, 2]` keys, a single
+    batch-wide draw (== `jax.random.categorical`'s stream) otherwise."""
+    rng = jnp.asarray(rng)
+    if rng.ndim == 2:
+        return jax.vmap(lambda k: jax.random.gumbel(k, shape[1:]))(rng)
+    return jax.random.gumbel(rng, shape)
+
+
+def sample_with_logprobs(logits: jax.Array, rng: jax.Array, *,
+                         true_vocab: int, temperature=0.0, top_k=0,
+                         top_p=1.0):
+    """logits: [B, V_padded] -> (token ids [B], logprobs [B]).
+
+    temperature/top_k/top_p: scalars or per-row [B] arrays; rng: one key
+    (batch-shared stream) or per-row keys [B, 2] from `request_keys`.
+    Per row: temperature <= 0 takes the argmax; otherwise the logits are
+    temperature-scaled, top-k filtered, then top-p filtered over the
+    RENORMALIZED top-k survivors (the standard sequential composition;
+    0 / 1.0 are exact per-row no-ops), and sampled by Gumbel-argmax from
+    that row's stream.  Vocab
+    padding (ids >= true_vocab) can never be sampled at any temperature:
+    invalid lanes hold a temperature-independent floor.  The returned
+    logprob is `log_softmax` of the raw pad-masked logits at the chosen
+    token — a stable per-token score that does not move with the
+    sampling knobs.
+    """
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+    invalid = jnp.zeros((1, V), bool)
+    if true_vocab < V:
+        invalid = (jnp.arange(V) >= true_vocab)[None]
+        logits = jnp.where(invalid, NEG, logits)
+    temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    tks = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
+    tps = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (B,))
+
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _stochastic(_):
+        # scale stochastic rows; re-floor invalid lanes AFTER the division
+        # so huge temperatures cannot lift padding into Gumbel-noise range
+        safe_t = jnp.where(temps > 0.0, temps, 1.0)[:, None]
+        scaled = jnp.where(invalid, NEG, logits / safe_t)
+        # top-k: kth-largest threshold per row; top_k=0 rows keep
+        # everything (the gather still needs a valid index, hence the clip)
+        sorted_desc = -jnp.sort(-scaled, axis=-1)
+        kth = jnp.take_along_axis(
+            sorted_desc, jnp.clip(tks - 1, 0, V - 1)[:, None], axis=-1)
+        keep_k = (tks <= 0)[:, None] | (scaled >= kth)
+        # top-p (nucleus) runs SEQUENTIALLY on the top-k survivors —
+        # softmax over the filtered logits renormalizes their mass,
+        # matching the standard top-k-then-top-p composition.  The sorted
+        # survivor distribution is the rank-masked first sort (no second
+        # sort).  Keep the smallest prefix whose mass reaches top_p: a
+        # token survives iff the mass BEFORE it is < top_p, so the
+        # per-row argmax always survives and top_p=1.0 rows are exact
+        # no-ops.
+        eff_k = jnp.where(tks <= 0, V, tks)[:, None]
+        sorted_f = jnp.where(jnp.arange(V)[None] < eff_k, sorted_desc, NEG)
+        p_sorted = jax.nn.softmax(sorted_f, axis=-1)
+        mass_before = jnp.cumsum(p_sorted, axis=-1) - p_sorted
+        n_keep = jnp.sum(mass_before < tps[:, None], axis=-1)
+        pth = jnp.take_along_axis(
+            sorted_f, jnp.clip(n_keep - 1, 0, V - 1)[:, None], axis=-1)
+        keep = keep_k & ((tps >= 1.0)[:, None] | (scaled >= pth))
+        masked = jnp.where(keep & ~invalid, scaled, NEG)
+        stoch = jnp.argmax(masked + _noise(rng, (B, V)), axis=-1)
+        return jnp.where(temps > 0.0, stoch.astype(jnp.int32), greedy)
+
+    # an all-greedy batch (the serving default) skips the sort / nucleus /
+    # RNG machinery at RUNTIME; lax.cond keeps it ONE compiled signature,
+    # so the decode step's compile count stays invariant to the params mix
+    toks = jax.lax.cond(jnp.any(temps > 0.0), _stochastic,
+                        lambda _: greedy, operand=None)
+    lps = jnp.take_along_axis(jax.nn.log_softmax(logits, axis=-1),
+                              toks[:, None].astype(jnp.int32),
+                              axis=-1)[:, 0]
+    return toks, lps
+
 
 def sample(logits: jax.Array, rng: jax.Array, *, true_vocab: int,
-           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
-    """logits: [B, V_padded] -> token ids [B]."""
-    V = logits.shape[-1]
-    logits = logits.astype(jnp.float32)
-    if true_vocab < V:
-        pad = jnp.arange(V) >= true_vocab
-        logits = jnp.where(pad[None], -1e9, logits)
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / temperature
-    if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -1e9, logits)
-    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+           temperature=0.0, top_k=0, top_p=1.0) -> jax.Array:
+    """logits: [B, V_padded] -> token ids [B] (see sample_with_logprobs)."""
+    toks, _ = sample_with_logprobs(logits, rng, true_vocab=true_vocab,
+                                   temperature=temperature, top_k=top_k,
+                                   top_p=top_p)
+    return toks

@@ -1,5 +1,13 @@
 """Continuous-batching scheduler over the KVNAND engine.
 
+The batchers here are INTERNAL engines behind the `KVNANDServer` facade
+(`serving/api.py`) — launch/examples/benchmarks construct the facade,
+not these classes.  Each request carries its own `SamplingParams`; the
+per-slot temperature/top-k/top-p/seed arrays enter the jitted decode
+step as traced arguments (one compile for any mix of combinations), and
+each request draws from its own `(seed, position)` PRNG stream — see
+DESIGN.md §10.
+
 Chunked prefill interleaved with batched decode:
 
   * fixed decode batch of B slots; finished/empty slots are refilled from
@@ -59,6 +67,8 @@ fails fast when handed a shared-pool EngineConfig.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Set
 
@@ -72,18 +82,39 @@ from repro.core.engine import KVNANDEngine
 from repro.core.page_alloc import (CacheHit, OutOfPages, PageAllocator,
                                    PrefixCache)
 from repro.models.transformer import Runtime
-from repro.serving.sampler import sample
+from repro.serving.sampler import (SamplingParams, request_keys,
+                                   sample_with_logprobs)
 
 MIN_PROMPT_BUCKET = 16
 
 
+@functools.partial(jax.jit, static_argnames=("true_vocab",))
+def _sample_one(lg, seeds, pos, t, k, p, *, true_vocab):
+    """One-row sampler for the prefill handoff / exact-hit first token.
+    Module-level so every batcher in the process shares ONE compile per
+    (vocab, shape) — a fresh server does not re-pay the RNG lowering."""
+    return sample_with_logprobs(lg, request_keys(seeds, pos),
+                                true_vocab=true_vocab, temperature=t,
+                                top_k=k, top_p=p)
+
+
 @dataclasses.dataclass
 class Request:
+    """One in-flight request.  `params` carries the per-request sampling
+    knobs (defaulted from the batcher's `temperature`/`max_new` at submit
+    for legacy callers); timing marks feed `RequestOutput`'s TTFT/TPOT.
+    """
     uid: int
     prompt: List[int]
     max_new: int
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    params: Optional[SamplingParams] = None
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None   # stop|length|capacity|aborted
+    submit_ts: Optional[float] = None
+    first_ts: Optional[float] = None
+    finish_ts: Optional[float] = None
 
 
 def bucket_length(n: int, lo: int = MIN_PROMPT_BUCKET,
@@ -145,7 +176,7 @@ class ContinuousBatcher:
         self._prefix = cfg.n_meta_tokens
         self.step_token_budget = (step_token_budget
                                   or prefill_chunk_tokens + batch_slots)
-        self.rng = jax.random.PRNGKey(seed)
+        self.seed = seed
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.cache = self.engine.init_cache(batch_slots, max_context)
@@ -156,9 +187,23 @@ class ContinuousBatcher:
         self.alloc: Optional[PageAllocator] = None
         self.alloc_w: Optional[PageAllocator] = None
         self.prefix_cache: Optional[PrefixCache] = None
-        self._decode = jax.jit(
-            lambda p, c, t, a: self.engine.decode_step(p, c, t, active=a),
-            donate_argnums=(1,))
+        # per-slot sampling params, consumed as TRACED arrays inside the
+        # jitted decode step: any mix of per-request temperatures / top-k /
+        # top-p / seeds shares the one compiled signature
+        self._temps = np.zeros(batch_slots, np.float32)
+        self._topk = np.zeros(batch_slots, np.int32)
+        self._topp = np.ones(batch_slots, np.float32)
+        self._seeds = np.zeros(batch_slots, np.uint32)
+
+        def _decode_fn(p, c, t, a, temps, tk, tp, seeds, pos):
+            logits, c = self.engine.decode_step(p, c, t, active=a)
+            toks, lps = sample_with_logprobs(
+                logits, request_keys(seeds, pos),
+                true_vocab=self.cfg.vocab_size, temperature=temps,
+                top_k=tk, top_p=tp)
+            return toks, lps, c
+
+        self._decode = jax.jit(_decode_fn, donate_argnums=(1,))
         self._chunk_first = jax.jit(
             lambda p, c, t, s, st, n: self.engine.prefill_chunk(
                 p, c, {"tokens": t}, s, st, n, first=True),
@@ -340,7 +385,94 @@ class ContinuousBatcher:
             self._compile_keys.add(k)
             self.stats["compiles"] += 1
 
+    # -- per-request sampling / lifecycle ------------------------------
+    def _seed_of(self, req: Request) -> np.uint32:
+        """The request's PRNG-stream seed: its explicit `params.seed`, or
+        a (batcher seed, uid) hash — in both cases independent of batch
+        composition and admission order, so a request's stream never
+        consumes from (or perturbs) any other request's."""
+        if req.params is not None and req.params.seed is not None:
+            return np.uint32(req.params.seed & 0xFFFFFFFF)
+        return np.uint32((self.seed * 0x9E3779B1 + req.uid * 0x85EBCA77
+                          + 0x165667B1) & 0xFFFFFFFF)
+
+    def _set_slot_params(self, i: int, req: Request):
+        p = req.params
+        self._temps[i] = p.temperature
+        self._topk[i] = p.top_k
+        self._topp[i] = p.top_p
+        self._seeds[i] = self._seed_of(req)
+
+    def _sample_row(self, logits, req: Request):
+        """Sample ONE request's next token (prefill handoff / exact-hit
+        paths) through the same per-request stream the batched decode
+        uses: key = fold(seed, tokens emitted so far)."""
+        p = req.params
+        self._count_compile("sample_row")
+        toks, lps = _sample_one(
+            jnp.asarray(logits),
+            np.asarray([self._seed_of(req)], np.uint32),
+            np.asarray([len(req.output)], np.int32),
+            np.float32(p.temperature), np.int32(p.top_k),
+            np.float32(p.top_p), true_vocab=self.cfg.vocab_size)
+        return int(toks[0]), float(lps[0])
+
+    def _finish(self, i: int, reason: str):
+        """Retire slot i's request: record the finish reason/timestamp and
+        recycle the slot (shared pool: refcounts returned, reservations
+        released)."""
+        req = self.slots[i]
+        req.done = True
+        req.finish_reason = reason
+        req.finish_ts = time.monotonic()
+        self.completed[req.uid] = req
+        self.slots[i] = None              # slot pages recycled in place
+        self._lengths[i] = 0
+        self._free_slot_pages(i)          # shared pool: refcount--
+
+    def _emit_token(self, i: int, req: Request, tok: int, lp: float):
+        """Append one sampled token and apply the finish rules (stop
+        token beats length; capacity is checked by the decode sweep)."""
+        req.output.append(tok)
+        if req.params.logprobs:
+            req.logprobs.append(lp)
+        if req.first_ts is None:
+            req.first_ts = time.monotonic()
+        if tok in req.params.stop_token_ids:
+            self._finish(i, "stop")
+        elif len(req.output) >= req.max_new:
+            self._finish(i, "length")
+
+    def abort(self, uid: int) -> bool:
+        """Cancel a request wherever it is: still queued, mid-chunked-
+        prefill, or decoding.  Running requests release their shared-pool
+        pages (refcounts intact — prefix-cache references survive) and
+        free the slot immediately.  Returns False for unknown/finished
+        uids."""
+        for r in self.queue:
+            if r.uid == uid:
+                self.queue.remove(r)
+                r.done = True
+                r.finish_reason = "aborted"
+                r.finish_ts = time.monotonic()
+                self.completed[uid] = r
+                return True
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                self._prefill_live.pop(i, None)
+                self._finish(i, "aborted")
+                return True
+        return False
+
     def submit(self, req: Request):
+        if req.params is None:
+            # legacy surface: batcher-global temperature, greedy filters
+            req.params = SamplingParams(temperature=self.temperature,
+                                        max_new_tokens=req.max_new)
+        else:
+            req.max_new = req.params.max_new_tokens
+        if req.submit_ts is None:
+            req.submit_ts = time.monotonic()
         n = len(req.prompt)
         cap = self.max_context - 1 - self._prefix
         if n == 0:
@@ -370,6 +502,7 @@ class ContinuousBatcher:
                     continue
                 req = self.queue.popleft()
                 self.slots[i] = req
+                self._set_slot_params(i, req)
                 self._start_prefill(i, req)
                 self.stats["admits"] += 1
 
@@ -423,6 +556,7 @@ class ContinuousBatcher:
 
         self.queue.popleft()
         self.slots[i] = req
+        self._set_slot_params(i, req)
         self.stats["admits"] += 1
         self.stats["prompt_pages"] += -(-n // T)
         # eager window-ring allocation (bounded, recycled in place)
@@ -442,11 +576,6 @@ class ContinuousBatcher:
             self.cache = dataclasses.replace(
                 self.cache,
                 lengths=self.cache.lengths.at[i].set(n))
-            self.rng, key = jax.random.split(self.rng)
-            tok = int(sample(jnp.asarray(hit.exact.logits)[None], key,
-                             true_vocab=self.cfg.vocab_size,
-                             temperature=self.temperature)[0])
-            req.output.append(tok)
         else:
             mapped = self._map_cached_pages(i, hit.full_pages)
             self._resv[i] = need_g - mapped     # full pages never rewritten
@@ -455,6 +584,13 @@ class ContinuousBatcher:
         self.stats["prefix_hit_pages"] += mapped
         self._tables_dirty = self._tables_dirty or mapped > 0
         self._push_tables()
+        if hit.exact is not None:
+            # first token from the cached last-token logits, through the
+            # request's OWN params and PRNG stream (accounting above is
+            # final first: a stop/length finish frees the slot cleanly)
+            tok, lp = self._sample_row(
+                jnp.asarray(hit.exact.logits)[None], req)
+            self._emit_token(i, req, tok, lp)
         return True
 
     def _prefill_tick(self, i: int, ps: _PrefillState):
@@ -486,10 +622,8 @@ class ContinuousBatcher:
             self._lengths[i] = self._prefix + ps.n
             if self.prefix_cache is not None:
                 self._register_prefix(i, ps, np.asarray(logits[0]))
-            self.rng, k = jax.random.split(self.rng)
-            tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
-                             temperature=self.temperature)[0])
-            ps.req.output.append(tok)
+            tok, lp = self._sample_row(logits, ps.req)
+            self._emit_token(i, ps.req, tok, lp)
 
     def step(self) -> int:
         """One interleaved step: a token budget funds the decode batch
@@ -518,16 +652,19 @@ class ContinuousBatcher:
         return decoded + chunks_done
 
     def _decode_batch(self, active: List[int]) -> int:
-        """One masked decode over `active` slots: sample, advance lengths,
-        sweep completions (shared by both schedulers — the parity pair
-        must never diverge on this body)."""
+        """One masked decode over `active` slots: sample each row through
+        its OWN params/PRNG stream inside the jitted step, advance
+        lengths, sweep completions (shared by both schedulers — the
+        parity pair must never diverge on this body)."""
         if not active:
             return 0
         tokens = np.zeros((self.B, 1), np.int32)
         mask = np.zeros(self.B, bool)
+        positions = np.zeros(self.B, np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].output[-1]
             mask[i] = True
+            positions[i] = len(self.slots[i].output)
         if self.shared and self.alloc is not None:
             # every active slot appends at its current position: make that
             # page exclusively writable (lazy alloc, or COW off a shared
@@ -537,24 +674,22 @@ class ContinuousBatcher:
                 self._ensure_page(i, int(self._lengths[i]) // T)
             self._push_tables()
         self._count_compile("decode", self.B)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(mask))
-        self.rng, k = jax.random.split(self.rng)
-        next_tokens = sample(logits, k, true_vocab=self.cfg.vocab_size,
-                             temperature=self.temperature)
+        # sampling params ride as traced per-slot arrays: any mix of
+        # per-request combinations hits this one compiled signature
+        toks, lps, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(mask), jnp.asarray(self._temps),
+            jnp.asarray(self._topk), jnp.asarray(self._topp),
+            jnp.asarray(self._seeds), jnp.asarray(positions))
+        toks, lps = np.asarray(toks), np.asarray(lps)
         self._lengths[active] += 1
         self.stats["decode_tokens"] += len(active)
         for i in active:
             req = self.slots[i]
-            req.output.append(int(next_tokens[i]))
-            if (len(req.output) >= req.max_new
-                    or self._lengths[i] + 1 >= self.max_context):
-                req.done = True
-                self.completed[req.uid] = req
-                self.slots[i] = None          # slot pages recycled in place
-                self._lengths[i] = 0
-                self._free_slot_pages(i)      # shared pool: refcount--
+            self._emit_token(i, req, int(toks[i]), float(lps[i]))
+            if (self.slots[i] is req
+                    and self._lengths[i] + 1 >= self.max_context):
+                self._finish(i, "capacity")
         return len(active)
 
     def run_to_completion(self, max_steps: int = 10_000):
@@ -602,6 +737,7 @@ class SpliceBatcher(ContinuousBatcher):
             if self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
                 self.slots[i] = req
+                self._set_slot_params(i, req)
                 # decoders idle for the whole admit: in chunk units, the
                 # interleaved scheduler would have run this many decode
                 # steps over the currently active slots
@@ -634,10 +770,8 @@ class SpliceBatcher(ContinuousBatcher):
         self.cache = self._splice(self.cache, c1,
                                   jnp.asarray(i, jnp.int32))
         self._lengths[i] = self._prefix + n
-        self.rng, k = jax.random.split(self.rng)
-        tok = int(sample(logits, k, true_vocab=self.cfg.vocab_size,
-                         temperature=self.temperature)[0])
-        req.output.append(tok)
+        tok, lp = self._sample_row(logits, req)
+        self._emit_token(i, req, tok, lp)
 
     def step(self) -> int:
         """One decode step over all active slots (admits prefill eagerly
