@@ -27,8 +27,19 @@ Shared-pool trajectory metrics (the allocator's capacity win):
         > 1 means the mix could NOT have been admitted under the old
         per-slot stripe layout, yet the pooled allocator drains it.
 
+Speculative decoding (DESIGN.md §11) gets its own trace: a repetitive
+prompt set where prompt-lookup drafts actually hit, drained through the
+verify path and cross-checked token-identical against sequential decode:
+
+  serving/spec/accepted_per_step      tokens emitted per verify step
+        (accepted drafts + the correction token); > 1.0 == speculation
+        genuinely amortizes weight loads on this trace
+  serving/spec/wall                   end-to-end µs for the spec drain
+  serving/spec/seq_wall               the same trace decoded sequentially
+
 `wall`, `steps_to_drain`, and the ttft/tpot p50 rows are gated by
-check_regression.py (p95 rows are informational — compile-dominated);
+check_regression.py (p95 rows are informational — compile-dominated;
+the serving/spec/* rows are informational too while the feature lands);
 counter rows carry the count in `us_per_call` (the harness's one
 numeric column) with the unit spelled out in `derived`.
 """
@@ -62,17 +73,24 @@ def _prefix_trace(vocab):
     return [sysp + t for t in tails] + [sysp + tails[0]]
 
 
+def _spec_trace(vocab):
+    """Repetitive prompts (a 6-token motif repeated) so prompt-lookup
+    drafting has something to hit."""
+    rng = np.random.default_rng(17)
+    return [(rng.integers(1, vocab, 6).tolist() * 5) for _ in range(4)]
+
+
 def _drain(scheduler, cfg, params, eng, prompts, *, slots=SLOTS,
-           max_context=MAX_CONTEXT):
+           max_context=MAX_CONTEXT, spec_k=0, max_new=MAX_NEW):
     from repro.serving.api import (KVNANDServer, SamplingParams,
                                    ServerConfig)
 
     server = KVNANDServer(
         ServerConfig(scheduler=scheduler, engine=eng, batch_slots=slots,
                      max_context=max_context,
-                     prefill_chunk_tokens=CHUNK),
+                     prefill_chunk_tokens=CHUNK, speculation_k=spec_k),
         cfg=cfg, params=params)
-    sp = SamplingParams(max_new_tokens=MAX_NEW)
+    sp = SamplingParams(max_new_tokens=max_new)
     t0 = time.perf_counter()
     outs = server.generate(prompts, sp)
     dt = time.perf_counter() - t0
@@ -162,6 +180,34 @@ def run():
          f"x: {6 * npg} stripe pages admitted through a "
          f"{st['pool_total_pages']}-page pool "
          f"(peak {st['pool_peak_pages']} live)")
+
+    # speculative decoding: a repetitive trace where lookup drafts hit;
+    # outputs must stay token-identical to sequential decode, and each
+    # verify step must amortize > 1 token (the whole point)
+    sprompts = _spec_trace(cfg.vocab_size)
+    dt_seq, _, _, o_seq, _ = _drain("interleaved", cfg, params, shared,
+                                    sprompts, max_new=16)
+    emit("serving/spec/seq_wall", dt_seq * 1e6,
+         "us: same trace decoded sequentially")
+    dt, total, st, o_spec, _ = _drain("interleaved", cfg, params, shared,
+                                      sprompts, spec_k=4, max_new=16)
+    if o_spec != o_seq:
+        raise AssertionError("speculative outputs diverged from "
+                             "sequential decode")
+    from repro.serving.api import accepted_tokens_per_step
+    per_step = accepted_tokens_per_step(st["spec_accepted"],
+                                        st["spec_steps"]) or 0.0
+    if per_step <= 1.0:
+        raise AssertionError(
+            f"speculation never accepted a draft on the repetitive "
+            f"trace (accepted {st['spec_accepted']} over "
+            f"{st['spec_steps']} verify row-steps)")
+    emit("serving/spec/accepted_per_step", per_step,
+         f"tokens per request-verify-step ({st['spec_accepted']} "
+         f"drafts accepted of {st['spec_drafted']} over "
+         f"{st['spec_steps']} row-steps)")
+    emit("serving/spec/wall", dt * 1e6,
+         f"{total / dt:.1f} tok/s cpu ({total} tokens, spec_k=4)")
 
 
 if __name__ == "__main__":

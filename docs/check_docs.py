@@ -1,0 +1,83 @@
+"""Docs gate for the CI `docs` job.
+
+Two checks, both cheap and deterministic:
+
+  1. LINK CHECK — every relative markdown link in README.md, docs/*.md
+     and DESIGN.md must point at a file or directory that exists in the
+     repo (external http(s)/mailto links and pure #anchors are skipped).
+     The README's architecture map is only useful while its file
+     pointers stay alive; this fails the build when a refactor moves one.
+
+  2. QUICKSTART SMOKE — the first ```python fence in README.md is
+     extracted verbatim and executed with PYTHONPATH=src.  The front
+     door snippet must keep working, not rot.
+
+Run locally:  python docs/check_docs.py   (from the repo root)
+"""
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", REPO / "DESIGN.md",
+             *sorted((REPO / "docs").glob("*.md"))]
+
+# [text](target) markdown links; images ![..](..) match the same way
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def check_links() -> list:
+    errors = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(REPO)}: file missing")
+            continue
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#")[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(REPO)}: dead pointer -> {target}")
+    return errors
+
+
+def run_quickstart() -> int:
+    readme = (REPO / "README.md").read_text()
+    m = _FENCE.search(readme)
+    if not m:
+        print("[check_docs] no ```python fence in README.md")
+        return 1
+    with tempfile.NamedTemporaryFile("w", suffix=".py",
+                                     delete=False) as f:
+        f.write(m.group(1))
+        snippet = f.name
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    print("[check_docs] running README quickstart snippet ...")
+    proc = subprocess.run([sys.executable, snippet], env=env,
+                          cwd=str(REPO))
+    return proc.returncode
+
+
+def main() -> int:
+    errors = check_links()
+    for e in errors:
+        print(f"[check_docs] {e}")
+    n_links = sum(len(_LINK.findall(p.read_text()))
+                  for p in DOC_FILES if p.exists())
+    print(f"[check_docs] checked {n_links} links across "
+          f"{len(DOC_FILES)} files: {len(errors)} dead")
+    if errors:
+        return 1
+    return run_quickstart()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -240,6 +240,11 @@ class EngineConfig:
     total_pages: int = 0            # global-pool physical pages (0 -> B·NPg)
     total_pages_w: int = 0          # window-pool physical pages (0 -> B·NPw)
     uniform_lengths: bool = True    # static batching: lockstep appends
+    # draft-and-verify speculative decoding: tokens drafted per decode
+    # step (prompt lookup) and verified in one pass; 0 = sequential.
+    # DSE-selectable (`recommend_engine_config`) like the other knobs;
+    # `ServerConfig.speculation_k` overrides per server.
+    speculation_k: int = 0
     attn_impl: str = "auto"         # "auto" | "pallas" | "ref" | "interpret"
     gemv_impl: str = "auto"
     # training-side knobs
@@ -255,6 +260,9 @@ class EngineConfig:
         if self.kv_quant == "kv4" and self.page_tokens % 2:
             raise ValueError("kv4 packs token pairs: page_tokens must be "
                              f"even, got {self.page_tokens}")
+        if self.speculation_k < 0:
+            raise ValueError(f"speculation_k must be >= 0, "
+                             f"got {self.speculation_k}")
 
 
 # ---------------------------------------------------------------------------

@@ -29,11 +29,16 @@ class DSEPoint:
     kv_bits: int = 0          # stored KV page format (0 -> abits)
     capacity: int = 0         # concurrent seq-length contexts (pooled
                               # page allocation, §IV-D — Track-B admission)
+    spec_k: int = 0           # draft tokens per verify step (0 = seq.)
+    tokens_per_step: float = 1.0  # E[emitted] at the assumed accept rate
 
 
 # Track-B paged-KV formats as a DSE axis (0 = keep abits-wide KV, the
 # bf16 pool); mirrors how the paper's DSE already sweeps weight bits.
 KV_FORMATS = {0: "none", 8: "kv8", 4: "kv4"}
+
+# speculation depths swept by the speculation_k axis (0 = sequential)
+SPEC_KS = (0, 2, 4, 8)
 
 
 def enumerate_configs(total_dies: int = 8, wbits: int = 4, abits: int = 16,
@@ -71,6 +76,32 @@ def sweep_kv_formats(cfg: ModelConfig, seqs, total_dies: int = 8,
     return points
 
 
+def sweep_speculation(cfg: ModelConfig, seqs, total_dies: int = 8,
+                      wbits: int = 4, abits: int = 16, kv_bits: int = 0,
+                      accept_rate: float = 0.6,
+                      spec_ks=SPEC_KS) -> List[DSEPoint]:
+    """Sweep with the speculation_k axis unlocked: per-token latency of
+    k-draft verify steps at the assumed per-token `accept_rate` (draft
+    overhead — span-scaled MACs/softmax traffic — against one weight
+    load and one KV walk amortized over E[accepted+1] tokens)."""
+    points = []
+    for sys in enumerate_configs(total_dies, wbits, abits, kv_bits):
+        for seq in seqs:
+            oom = fs.is_oom(sys, cfg, seq)
+            for k in spec_ks:
+                lat = math.inf if oom else fs.spec_decode_token_latency(
+                    sys, cfg, seq, k, accept_rate)
+                points.append(DSEPoint(
+                    sys.name, sys.weight_dies,
+                    sys.kv_dies if sys.kind == "kvnand-d" else 0,
+                    wbits, abits, seq, lat, oom, kv_bits,
+                    capacity=fs.pooled_capacity(sys, cfg, seq),
+                    spec_k=k,
+                    tokens_per_step=fs.spec_tokens_per_step(
+                        k, accept_rate)))
+    return points
+
+
 def heatmap(cfg: ModelConfig, seqs, total_dies: int = 8, wbits: int = 4,
             abits: int = 16, kv_bits: int = 0) -> Dict[str, Dict[int, float]]:
     """{config_name: {seq: latency}} — Fig 15 layout (inf = OOM blank)."""
@@ -88,9 +119,38 @@ def best_config(cfg: ModelConfig, seq: int, total_dies: int = 8,
     return min(pts, key=lambda p: p.latency) if pts else None
 
 
+def _system_of(p: DSEPoint) -> fs.SystemConfig:
+    """Rebuild the swept SystemConfig a DSEPoint was scored on."""
+    if p.system.startswith("KVNAND-D"):
+        return fs.kvnand_d(p.g1, p.g2, p.wbits, p.abits,
+                           kv_bits=p.kv_bits)
+    return fs.kvnand_c(p.g1, p.wbits, p.abits, kv_bits=p.kv_bits)
+
+
+def recommend_speculation_k(sys: fs.SystemConfig, cfg: ModelConfig,
+                            seq: int, accept_rate: float,
+                            spec_ks=SPEC_KS,
+                            min_speedup: float = 1.05) -> int:
+    """Pick the verify span that minimizes expected per-token latency on
+    `sys` at the assumed acceptance rate.  Speculation must BEAT
+    sequential decode by `min_speedup` to be recommended at all — a
+    compute-bound short-context point where the span-scaled MACs eat
+    the amortization keeps speculation_k = 0."""
+    base = fs.decode_token_latency(sys, cfg, seq).total
+    best_k, best_lat = 0, base
+    for k in spec_ks:
+        if k <= 0:
+            continue
+        lat = fs.spec_decode_token_latency(sys, cfg, seq, k, accept_rate)
+        if lat < best_lat:
+            best_k, best_lat = k, lat
+    return best_k if base / max(best_lat, 1e-30) >= min_speedup else 0
+
+
 def recommend_engine_config(arch: str, seq: int, *,
                             total_dies: int = 16,
-                            allow_kv_quant: bool = True) -> EngineConfig:
+                            allow_kv_quant: bool = True,
+                            spec_accept_rate: float = 0.0) -> EngineConfig:
     """Map the Track-A DSE winner onto Track-B engine knobs:
 
     KVNAND-D winner  -> discrete plan (HG pipelining on)
@@ -103,6 +163,12 @@ def recommend_engine_config(arch: str, seq: int, *,
                         the WIDEST format wins.  Low-bit KV is only
                         recommended where KV traffic actually dominates
                         (long context), not as a blanket downgrade.
+    speculation_k    -> with `spec_accept_rate` > 0 (the workload's
+                        measured/assumed draft acceptance — serving
+                        tracks it on `RequestOutput`), the span that
+                        minimizes expected per-token latency on the
+                        winning system (`recommend_speculation_k`);
+                        0 / default keeps sequential decode.
     """
     cfg = get_config(arch)
     kv_axis = tuple(KV_FORMATS) if allow_kv_quant else (0,)
@@ -122,9 +188,14 @@ def recommend_engine_config(arch: str, seq: int, *,
     _, p, quant = max(near, key=lambda c: (c[1].kv_bits == 0, c[1].kv_bits,
                                            -c[0]))
     variant = "discrete" if p.system.startswith("KVNAND-D") else "compact"
+    spec_k = 0
+    if spec_accept_rate > 0.0:
+        spec_k = recommend_speculation_k(_system_of(p), cfg, seq,
+                                         spec_accept_rate)
     return EngineConfig(variant=variant, quant=quant,
                         hg_pipeline=(variant == "discrete"),
-                        kv_quant=KV_FORMATS[p.kv_bits])
+                        kv_quant=KV_FORMATS[p.kv_bits],
+                        speculation_k=spec_k)
 
 
 def best_discrete(cfg: ModelConfig, seq: int, total_dies: int = 8,

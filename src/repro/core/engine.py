@@ -211,6 +211,22 @@ class KVNANDEngine:
     def _layer_slice(pool, layer):
         return jax.lax.dynamic_index_in_dim(pool, layer, 0, keepdims=False)
 
+    def _global_bases(self, table) -> jax.Array:
+        """Per-page base positions [B, NP] for attention over the global
+        pool (decode and verify share this).  Shared pools walk LOGICAL
+        pages through the table, so logical page j's base is simply j·T
+        and pages past `lengths` (unallocated table entries) are
+        data-invalid already; stripe tables are permutations within the
+        stripe, inverted here into physical-page-indexed bases."""
+        B, NP = table.shape
+        T = self.eng.page_tokens
+        if self.eng.shared_pool:
+            return jnp.broadcast_to(
+                (jnp.arange(NP, dtype=jnp.int32) * T)[None], (B, NP))
+        return jnp.zeros((B, NP), jnp.int32).at[
+            jnp.arange(B)[:, None], table].set(
+            jnp.arange(NP, dtype=jnp.int32)[None] * T)
+
     # ------------------------------------------------------------------
     # per-layer attention (compact vs discrete)
     # ------------------------------------------------------------------
@@ -494,21 +510,8 @@ class KVNANDEngine:
         # shared per-step page bookkeeping (identical for every layer)
         self._table = cache.page_table_g
         self._table_w = cache.page_table_w
-        if cache.page_table_g is not None:
-            T = self.eng.page_tokens
-            NP = cache.page_table_g.shape[1]
-            if shared:
-                # attention walks LOGICAL pages through the table, so the
-                # base of logical page j is simply j·T; pages past `lengths`
-                # (unallocated table entries) are data-invalid already
-                self._base_g = jnp.broadcast_to(
-                    (jnp.arange(NP, dtype=jnp.int32) * T)[None], (B, NP))
-            else:
-                self._base_g = jnp.zeros((B, NP), jnp.int32).at[
-                    jnp.arange(B)[:, None], cache.page_table_g].set(
-                    jnp.arange(NP, dtype=jnp.int32)[None] * T)
-        else:
-            self._base_g = None
+        self._base_g = (self._global_bases(cache.page_table_g)
+                        if cache.page_table_g is not None else None)
         if cache.page_pos_w is not None:
             T = self.eng.page_tokens
             NPw = cache.page_pos_w.shape[1]
@@ -564,6 +567,241 @@ class KVNANDEngine:
         new_cache = dataclasses.replace(cache, **updates)
         logits = lm_head_logits(params, cfg, x)[:, 0]
         return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # speculative decode: draft-and-verify over a k+1-token span
+    # ------------------------------------------------------------------
+    def verify_step(self, params, cache: DecodeCache, tokens: jax.Array,
+                    *, accept, active: Optional[jax.Array] = None):
+        """Score a drafted span in ONE forward pass and append only the
+        accepted prefix (DESIGN.md §11).
+
+        tokens: [B, S] — per slot, the last emitted token followed by
+        S-1 drafted tokens (prompt lookup, `serving/draft.py`); logits
+        at span position j are the target distribution of the token
+        AFTER tokens[:, j].  The span attends via the two-partial merge
+        of chunked prefill (§8): a causal in-span partial over the
+        span's fresh K/V (`seqpar._attn_block_partial` — the mask is
+        position-relative, so one call serves every slot whatever its
+        length) and a past-pages partial (`paged_chunk_attention`,
+        batched per-row start/q_pos), merged by log-sum-exp.
+
+        accept: traced callback ``logits [B, S, V] -> (n_acc [B], aux)``
+        — the scheduler's sampler closure (`speculative_accept`), kept
+        outside the engine so it stays sampling-free.  After it returns,
+        ``n_acc[b] + 1`` span tokens (the last emitted token's K/V plus
+        the accepted drafts) are appended per active slot through the
+        span writers (`paged_kv.append_span*`): rejected positions are
+        gated to the drop sentinel, so rollback is "never written" on
+        every layout — f32, requantizing kv8/kv4 chains, window rings,
+        and shared-pool tables alike.  `lengths` advance by the emitted
+        count; the correction/bonus token's K/V lands on the NEXT step,
+        exactly like sequential decode.
+
+        active: optional [B] bool mask (continuous batching): inactive
+        slots get no append and no length advance.
+
+        Returns (aux, updated cache).  Recurrent families (ssm/hybrid)
+        and encoder-decoder archs are unsupported (carried state cannot
+        roll back); sharded meshes take the sequential decode path.
+        """
+        cfg, rt = self.cfg, self.rt
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"{cfg.family}: speculative verification cannot roll back "
+                "carried recurrent state; decode sequentially")
+        if cfg.is_encoder_decoder:
+            raise ValueError("verify_step does not support encoder-decoder "
+                             "archs")
+        if self.mesh is not None and self.mesh.size > 1:
+            raise NotImplementedError(
+                "sharded verify_step is not wired; run speculation "
+                "single-host (the mesh path covers sequential decode)")
+        if self.eng.uniform_lengths:
+            raise ValueError("verify_step requires the ragged "
+                             "(uniform_lengths=False) append path: slots "
+                             "accept different span lengths")
+        B, S = tokens.shape
+        lengths = cache.lengths
+        shared = self.eng.shared_pool
+        T = self.eng.page_tokens
+        scale = cfg.d_head ** -0.5
+
+        self._table = cache.page_table_g
+        self._table_w = cache.page_table_w
+        base_g = (self._global_bases(cache.page_table_g)
+                  if cache.page_table_g is not None else None)
+
+        positions = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        x = embed_lookup(params["embedding"], tokens, rt.activ_dtype)
+
+        n_groups = cfg.n_layers // self.period
+        grouped_params = jax.tree.map(
+            lambda a: a.reshape((n_groups, self.period) + a.shape[1:]),
+            params["layers"])
+        pools = self._collect(cache, POOL_G + POOL_W)
+        fmt = self.eng.kv_quant
+
+        idx = {
+            "p": grouped_params,
+            "g0": jnp.arange(n_groups, dtype=jnp.int32) * self.g_per_group,
+            "w0": jnp.arange(n_groups, dtype=jnp.int32) * self.w_per_group,
+        }
+
+        def attn_layer(pl_, xc, g_idx, w_idx, is_glob):
+            """One attention layer of the span forward; returns the layer
+            output and the span's fresh (k, v) for the append phase."""
+            use_window = (cfg.window is not None) and not is_glob
+            window = cfg.window if use_window else None
+            h = rms_norm(xc, pl_["ln1"], cfg.norm_eps)
+            q, k, v = attn_mod.project_qkv(pl_["attn"], cfg, h, positions)
+            # in-span causal partial: the mask is position-RELATIVE
+            # (span token i sees span tokens <= i, window likewise), so
+            # relative coordinates serve every slot at once.  The span's
+            # K/V are rounded through the pool dtype first — sequential
+            # decode would read these tokens back from the pool, and the
+            # greedy-parity guarantee needs the same values on both
+            # paths (quantized pools keep full-precision span K/V: the
+            # sequential requant chain is unknowable mid-span, and the
+            # residual is bounded by the format's own quant noise).
+            if fmt == "none":
+                kv_dt = jnp.dtype(self.eng.kv_dtype)
+                q_in = (q.astype(jnp.float32) * scale).astype(kv_dt)
+                k_in, v_in, sc = k.astype(kv_dt), v.astype(kv_dt), 1.0
+            else:
+                q_in, k_in, v_in, sc = q, k, v, scale
+            o, m, l = seqpar._attn_block_partial(
+                q_in, k_in, v_in, jnp.arange(S), jnp.zeros((), jnp.int32),
+                causal=True, window=window, is_global=None, scale=sc)
+            # past partial vs the slot's already-written pages
+            if use_window:
+                kname, vname, idx_l = "k_pages_w", "v_pages_w", w_idx
+                base, table = cache.page_pos_w, self._table_w
+            else:
+                kname, vname, idx_l = "k_pages_g", "v_pages_g", g_idx
+                base, table = base_g, self._table
+            kp = self._layer_slice(pools[kname], idx_l)
+            vp = self._layer_slice(pools[vname], idx_l)
+            ks = vs = None
+            if fmt != "none":
+                sfx = "w" if use_window else "g"
+                ks = self._layer_slice(pools[f"k_scale_{sfx}"], idx_l)
+                vs = self._layer_slice(pools[f"v_scale_{sfx}"], idx_l)
+            from repro.kernels.paged_attention import paged_chunk_attention
+            o2, m2, l2 = paged_chunk_attention(
+                q, kp, vp, base, lengths, positions, window=window,
+                impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks,
+                v_scale=vs, page_table=table if shared else None)
+            o, m, l = seqpar.merge_two(o, m, l, o2, m2, l2)
+            aout = attn_mod.project_out(pl_["attn"], cfg,
+                                        o.astype(h.dtype))
+            xc = xc + aout
+            h = rms_norm(xc, pl_["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                ff = moe(pl_["moe"], h, top_k=cfg.top_k,
+                         capacity_factor=rt.moe_capacity)
+            else:
+                ff = mlp(pl_["mlp"], h, cfg.gated_mlp)
+            return xc + ff, k, v
+
+        def fwd_body(xc, xs):
+            kv_k, kv_v = [], []
+            for j, is_glob in enumerate(self.pattern):
+                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                xc, k, v = attn_layer(pl_, xc, xs["g0"] + self._g_off[j],
+                                      xs["w0"] + self._w_off[j], is_glob)
+                kv_k.append(k)
+                kv_v.append(v)
+            # span K/V ride the ys stack — tiny ([period, B, S, K, dh])
+            # next to the pool carries the memory discipline protects
+            return xc, {"k": jnp.stack(kv_k), "v": jnp.stack(kv_v)}
+
+        x, span_kv = jax.lax.scan(fwd_body, x, idx)
+        logits = lm_head_logits(params, cfg, x)            # [B, S, V]
+
+        n_acc, aux = accept(logits)
+        n_write = jnp.clip(jnp.asarray(n_acc, jnp.int32) + 1, 0, S)
+        if active is not None:
+            n_write = jnp.where(active, n_write, 0)
+
+        # span page coordinates, shared by every layer of a pool: the
+        # write gate redirects rejected/inactive positions to the drop
+        # sentinel — rejected drafts never touch a page (the rollback)
+        pos_s = lengths[None, :] + jnp.arange(S, dtype=jnp.int32)[:, None]
+        slot_s = pos_s % T                                  # [S, B]
+        write = jnp.arange(S, dtype=jnp.int32)[:, None] < n_write[None, :]
+        phys_g = phys_w = None
+        if cache.page_table_g is not None:
+            drop_g = paged_kv.pool_page_count(cache.k_pages_g, shared)
+            pg = jnp.take_along_axis(cache.page_table_g,
+                                     (pos_s // T).T, axis=1).T
+            phys_g = jnp.where(write, pg, drop_g)
+        if cache.page_pos_w is not None:
+            NPw = cache.page_pos_w.shape[1]
+            ring = (pos_s // T) % NPw
+            if shared:
+                drop_w = paged_kv.pool_page_count(cache.k_pages_w, shared)
+                pw = jnp.take_along_axis(cache.page_table_w, ring.T,
+                                         axis=1).T
+            else:
+                drop_w, pw = NPw, ring
+            phys_w = jnp.where(write, pw, drop_w)
+
+        def append_body(pools, xs):
+            for j, is_glob in enumerate(self.pattern):
+                use_window = (cfg.window is not None) and not is_glob
+                k_span = xs["kv"]["k"][j]                  # [B, S, K, dh]
+                v_span = xs["kv"]["v"][j]
+                if use_window:
+                    idx_l, phys = xs["w0"] + self._w_off[j], phys_w
+                    names = ("k_pages_w", "v_pages_w", "k_scale_w",
+                             "v_scale_w")
+                else:
+                    idx_l, phys = xs["g0"] + self._g_off[j], phys_g
+                    names = ("k_pages_g", "v_pages_g", "k_scale_g",
+                             "v_scale_g")
+                kname, vname, ksname, vsname = names
+                if fmt != "none":
+                    append = (paged_kv.append_span_quant_shared if shared
+                              else paged_kv.append_span_quant)
+                    pools[kname], pools[ksname] = append(
+                        pools[kname], pools[ksname], idx_l, phys, slot_s,
+                        k_span, fmt)
+                    pools[vname], pools[vsname] = append(
+                        pools[vname], pools[vsname], idx_l, phys, slot_s,
+                        v_span, fmt)
+                elif shared:
+                    pools[kname] = paged_kv.append_span_shared(
+                        pools[kname], idx_l, phys, slot_s, k_span)
+                    pools[vname] = paged_kv.append_span_shared(
+                        pools[vname], idx_l, phys, slot_s, v_span)
+                else:
+                    pools[kname] = paged_kv.append_span(
+                        pools[kname], idx_l, phys, slot_s, k_span)
+                    pools[vname] = paged_kv.append_span(
+                        pools[vname], idx_l, phys, slot_s, v_span)
+            return pools, None
+
+        pools, _ = jax.lax.scan(append_body, pools,
+                                {"kv": span_kv, "g0": idx["g0"],
+                                 "w0": idx["w0"]})
+
+        updates: Dict[str, Any] = dict(pools)
+        if cache.page_pos_w is not None:
+            # ring bases advance only for pages that received an
+            # ACCEPTED token, replaying sequential decode's fresh-page
+            # rule position by position
+            NPw = cache.page_pos_w.shape[1]
+            pos_w = cache.page_pos_w
+            b_idx = jnp.arange(B)
+            for s in range(S):
+                ring = (pos_s[s] // T) % NPw
+                fresh = (slot_s[s] == 0) & write[s]
+                newp = pos_w.at[b_idx, ring].set(pos_s[s])
+                pos_w = jnp.where(fresh[:, None], newp, pos_w)
+            updates["page_pos_w"] = pos_w
+        updates["lengths"] = lengths + n_write
+        return aux, dataclasses.replace(cache, **updates)
 
     # ------------------------------------------------------------------
     # prefill

@@ -187,23 +187,34 @@ def kv_bytes_layer(cfg: ModelConfig, seq: int, abits: int) -> float:
 # Latency model
 # ---------------------------------------------------------------------------
 
-def _gemv_time(die: FlashDie, n_dies: int, wb: float, wbits: int) -> float:
-    """Bandwidth/compute max for a weight GEMV spread over n_dies."""
+def _gemv_time(die: FlashDie, n_dies: int, wb: float, wbits: int,
+               span: int = 1) -> float:
+    """Bandwidth/compute max for a weight GEMV spread over n_dies.
+
+    span > 1 (speculative verification) turns the GEMV into a thin GEMM:
+    the weight READ is unchanged — the amortization speculation buys —
+    while the MAC count scales with the span.
+    """
     if n_dies <= 0:
         return math.inf
     t_read = wb / (n_dies * die.int_bw)
-    macs = wb * 8 / wbits
+    macs = span * wb * 8 / wbits
     t_mac = macs / (n_dies * die.mac_rate)
     return max(t_read, t_mac)
 
 
-def _attn_terms(sys: SystemConfig, cfg: ModelConfig, seq: int):
-    """Per-layer Logit+Attend (time, transfer_bytes) on the KV medium."""
+def _attn_terms(sys: SystemConfig, cfg: ModelConfig, seq: int,
+                span: int = 1):
+    """Per-layer Logit+Attend (time, transfer_bytes) on the KV medium.
+
+    span > 1: one KV walk serves all span queries (read bytes
+    unchanged); Logit/Attend MACs and softmax traffic scale with span.
+    """
     die, npu = sys.die, sys.npu
     kvb = kv_bytes_layer(cfg, seq, sys.kv_bits_eff)   # K+V bytes
-    macs = 2 * cfg.n_heads * seq * cfg.d_head      # logit + attend
+    macs = span * 2 * cfg.n_heads * seq * cfg.d_head  # logit + attend
     # softmax traffic: logits to NPU and probs back (KVNAND), h×seq each
-    sm_bytes = 2 * cfg.n_heads * seq * sys.abits / 8
+    sm_bytes = span * 2 * cfg.n_heads * seq * sys.abits / 8
 
     if sys.kind == "base1":
         t = kvb / sys.dram.bw + 2 * macs / npu.tops
@@ -221,7 +232,7 @@ def _attn_terms(sys: SystemConfig, cfg: ModelConfig, seq: int):
     # k serialized Logit→softmax→Attend exchanges per layer (Fig 10)
     t_sm = (sm_bytes / (n * die.ext_bw)
             + cfg.n_kv_heads * NPU_ROUNDTRIP
-            + (cfg.n_heads * seq) / npu.tops)
+            + (span * cfg.n_heads * seq) / npu.tops)
     return max(t_read, t_mac) + t_sm, sm_bytes
 
 
@@ -261,23 +272,25 @@ class Breakdown:
                 - self.overlap_saved)
 
 
-def decode_token_latency(sys: SystemConfig, cfg: ModelConfig,
-                         seq: int) -> Breakdown:
+def _step_breakdown(sys: SystemConfig, cfg: ModelConfig, seq: int,
+                    span: int, kv_writes: float) -> Breakdown:
+    """One decode/verify step over `span` tokens writing `kv_writes`
+    tokens' KV (sequential decode: span = kv_writes = 1)."""
     die = sys.die
     wb = weight_bytes(cfg, sys.wbits)
     L = cfg.n_layers
     n_w = sys.weight_dies
 
     b = Breakdown()
-    b.qkv = L * _gemv_time(die, n_w, wb["qkv"], sys.wbits)
-    b.o_proj = L * _gemv_time(die, n_w, wb["o"], sys.wbits)
-    b.ffn = L * _gemv_time(die, n_w, wb["ffn_active"], sys.wbits)
-    b.lm_head = _gemv_time(die, n_w, wb["lm_head"], sys.wbits)
-    t_attn, xfer = _attn_terms(sys, cfg, seq)
+    b.qkv = L * _gemv_time(die, n_w, wb["qkv"], sys.wbits, span)
+    b.o_proj = L * _gemv_time(die, n_w, wb["o"], sys.wbits, span)
+    b.ffn = L * _gemv_time(die, n_w, wb["ffn_active"], sys.wbits, span)
+    b.lm_head = _gemv_time(die, n_w, wb["lm_head"], sys.wbits, span)
+    t_attn, xfer = _attn_terms(sys, cfg, seq, span)
     b.attention = L * t_attn
-    b.kv_write = _kv_write_time(sys, cfg)
+    b.kv_write = kv_writes * _kv_write_time(sys, cfg)
     # activation vectors NPU<->IFC each layer (q, o, ffn in/out)
-    act = 4 * cfg.d_model * sys.abits / 8
+    act = span * 4 * cfg.d_model * sys.abits / 8
     io_bw = sys.total_ifc_dies * die.ext_bw
     b.transfer = L * (act / io_bw) + L * xfer / max(
         (sys.kv_dies if sys.kind in ("base1", "base2") else
@@ -290,11 +303,61 @@ def decode_token_latency(sys: SystemConfig, cfg: ModelConfig,
     return b
 
 
+def decode_token_latency(sys: SystemConfig, cfg: ModelConfig,
+                         seq: int) -> Breakdown:
+    return _step_breakdown(sys, cfg, seq, span=1, kv_writes=1.0)
+
+
 def decode_throughput(sys: SystemConfig, cfg: ModelConfig,
                       seq: int) -> float:
     if is_oom(sys, cfg, seq):
         return 0.0
     return 1.0 / decode_token_latency(sys, cfg, seq).total
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding (draft-and-verify) — the speculation_k DSE axis
+# ---------------------------------------------------------------------------
+#
+# A verify step scores k drafted tokens + 1 in one pass: the weight load
+# and the KV walk are paid ONCE for up to k+1 emitted tokens — the same
+# per-token-traffic lever the paper pulls with in-flash compute, applied
+# along the time axis.  The draft overhead is the span-scaled MAC and
+# softmax-traffic terms (and the accepted-token KV writes); on a
+# bandwidth-bound system those are the cheap side of the max(), which is
+# why `recommend_engine_config` trades them off explicitly.
+
+def spec_tokens_per_step(k: int, accept_rate: float) -> float:
+    """Expected tokens emitted per verify step with k drafts whose
+    per-token acceptance probability is `accept_rate` (geometric prefix
+    acceptance + the guaranteed correction/bonus token):
+    E = 1 + a + ... + a^k."""
+    if k <= 0:
+        return 1.0
+    a = min(max(accept_rate, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def spec_decode_step_latency(sys: SystemConfig, cfg: ModelConfig,
+                             seq: int, k: int,
+                             accept_rate: float) -> Breakdown:
+    """One draft-and-verify step: span = k+1 queries, one weight load,
+    one KV walk, E[accepted+1] KV writes."""
+    return _step_breakdown(sys, cfg, seq, span=k + 1,
+                           kv_writes=spec_tokens_per_step(k, accept_rate))
+
+
+def spec_decode_token_latency(sys: SystemConfig, cfg: ModelConfig,
+                              seq: int, k: int,
+                              accept_rate: float) -> float:
+    """Expected per-EMITTED-token latency under k-token speculation;
+    k = 0 is exactly `decode_token_latency`."""
+    if k <= 0:
+        return decode_token_latency(sys, cfg, seq).total
+    step = spec_decode_step_latency(sys, cfg, seq, k, accept_rate)
+    return step.total / spec_tokens_per_step(k, accept_rate)
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,12 @@ Invariants (property-tested in tests/test_page_alloc.py):
     one reference from the shared page);
   * fork safety — `share()`-ing a table row only bumps refcounts, so a
     forked sequence's decode can never mutate pages it shares until it
-    owns them exclusively.
+    owns them exclusively;
+  * speculative rollback — pages backed for a draft span that acceptance
+    never reaches are returned through plain `free()` with the caller's
+    reservation ledger restored (`serving/scheduler._rollback_pages`,
+    DESIGN.md §11): the allocator needs no special mode because
+    rejected drafts are never written.
 
 Shard awareness: when the physical page axis is sharded over the mesh
 (``seqpar``'s G2 dies), logical page j of a sequence should land on shard

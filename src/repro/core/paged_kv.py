@@ -35,6 +35,13 @@ Two page pools per model when the arch mixes attention spans:
 `page_pos` records each physical page's base token position so window
 validity is derived from data, not control flow.
 
+The writer family, layout by layout: one-shot/chunk fills
+(`fill_layer`, `fill_chunk_*`), single-token appends (`append_*`,
+`append_token_quant*`), and the accept-gated multi-token span appends
+(`append_span*`) that speculative verification uses — every write path
+shares the same drop-sentinel convention, so an out-of-range physical
+index discards the write instead of corrupting a live page.
+
 Recurrent families store O(1) state instead (rwkv/ssm fields); hybrids carry
 both; encoder-decoder carries precomputed cross-attention K/V.
 """
@@ -806,6 +813,78 @@ def fill_chunk_window_at_shared(pool, kv_chunk, layer, table_row, page0,
         lambda sp: table_row[(page0 + sp) % NP],
         lambda sp: sp * T < valid_len,
         scale=scale, kv_quant=kv_quant)
+
+
+# ---------------------------------------------------------------------------
+# Speculative-decode span appends (multi-token, accept-gated)
+# ---------------------------------------------------------------------------
+#
+# `KVNANDEngine.verify_step` scores a k+1-token span in one forward pass
+# and only then learns how many drafts were accepted.  The span writers
+# below append UP TO S tokens per sequence in page order, but every write
+# is gated per (sequence, span-position): the engine redirects the
+# physical page index of a rejected (or inactive-slot) position to the
+# pool's drop sentinel, so rejected drafts never reach a page.  That IS
+# the rollback for every layout — nothing stale to undo:
+#
+#   * f32 pools: no write happened, so no stale bytes sit beyond `lengths`
+#     waiting to inflate anything;
+#   * kv8/kv4 pools: each accepted token replays `append_token_quant`'s
+#     exact page chain (dequant → insert → zero dead slots → requant), so
+#     the page codes and scales match what sequential decode would have
+#     produced — a rejected draft never enters a page's amax;
+#   * window rings: ring base positions advance only for pages that
+#     received an accepted token (the engine derives them from the same
+#     gate);
+#   * shared pools: writes go through the slot's table row; the HOST half
+#     of the rollback (returning speculatively allocated pages to
+#     `core.page_alloc.PageAllocator` with refcounts and reservations
+#     intact) lives in `serving/scheduler.py`.
+#
+# phys/slot: [S, B] per-span-position page coordinates (already gated —
+# out-of-range phys drops); vals: [B, S, K, dh] span K or V.
+
+def append_span(pool, layer, phys, slot, vals):
+    """Ragged multi-token append into a stacked stripe pool.
+
+    pool: [L, B, K, NP, T, dh]; the S span positions land in sequence
+    order, so the page chain equals S sequential `decode_step` appends.
+    """
+    B = vals.shape[0]
+    b_idx = jnp.arange(B)
+    for s in range(vals.shape[1]):
+        pool = pool.at[layer, b_idx, :, phys[s], slot[s]].set(
+            vals[:, s].astype(pool.dtype), mode="drop")
+    return pool
+
+
+def append_span_shared(pool, layer, phys, slot, vals):
+    """`append_span` for a shared pool [L, K, P, T, dh] (table-translated
+    physical indices; the drop sentinel is P)."""
+    for s in range(vals.shape[1]):
+        pool = append_global_shared(pool, layer, phys[s], slot[s],
+                                    vals[:, s])
+    return pool
+
+
+def append_span_quant(pool, scale, layer, phys, slot, vals, fmt: str):
+    """Requantizing span append: one `append_token_quant` per span
+    position, reproducing sequential decode's page chain bit-for-bit
+    for the accepted prefix."""
+    for s in range(vals.shape[1]):
+        pool, scale = append_token_quant(pool, scale, layer, phys[s],
+                                         slot[s], vals[:, s], fmt)
+    return pool, scale
+
+
+def append_span_quant_shared(pool, scale, layer, phys, slot, vals,
+                             fmt: str):
+    """Shared-pool requantizing span append (see `append_span_quant`)."""
+    for s in range(vals.shape[1]):
+        pool, scale = append_token_quant_shared(pool, scale, layer,
+                                                phys[s], slot[s],
+                                                vals[:, s], fmt)
+    return pool, scale
 
 
 def copy_page_shared(pool, src, dst):

@@ -21,8 +21,11 @@ def paged_chunk_attention(q, k_pages, v_pages, page_base, start, q_pos, *,
                           window: Optional[int] = None, impl: str = "auto",
                           kv_quant: str = "none", k_scale=None,
                           v_scale=None, page_table=None):
-    """Impl dispatch for the chunked-prefill past-context partial.
+    """Impl dispatch for the past-context partial of a multi-token span.
 
+    Serves both chunked prefill (scalar `start`, `q_pos` [S]) and
+    speculative-decode verification (per-row `start` [B], `q_pos`
+    [B, S] — every slot of the decode batch sits at its own length).
     Mirrors `paged_attention_partial` so `EngineConfig.attn_impl` stays
     authoritative for both partials.  There is no Pallas chunk kernel yet
     (the natural follow-up): every impl — including "pallas" — currently

@@ -88,26 +88,32 @@ def paged_chunk_attention_ref(
     k_pages: jax.Array,    # [B, K, NP, T, dh] the slot's page stripe
     v_pages: jax.Array,
     page_base: jax.Array,  # [B, NP] absolute pos of slot 0 (<0 = unwritten)
-    start: jax.Array,      # scalar: absolute position of the chunk's first
-                           # token — only keys strictly BELOW start attend
-    q_pos: jax.Array,      # [S] absolute query positions
+    start: jax.Array,      # scalar or [B]: absolute position of the span's
+                           # first token — only keys strictly BELOW attend
+    q_pos: jax.Array,      # [S] or [B, S] absolute query positions
     *,
     window: Optional[int] = None,
     kv_quant: str = "none",
     k_scale: Optional[jax.Array] = None,   # [B, K, NP] per-page×head scales
     v_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Past-context partial attention for chunked prefill (validation ref).
+    """Past-context partial attention for a multi-token span (validation
+    ref).
 
     Multi-query generalization of `paged_attention_partial_ref`: every
-    query of an S-token prompt chunk attends the slot's already-written
-    pages.  The chunk's own K/V are handled by the in-chunk causal partial
+    query of an S-token span attends the slot's already-written pages.
+    The span's own K/V are handled by the in-span causal partial
     (`seqpar._attn_block_partial`), so keys at positions ≥ `start` — which
     may hold a recycled occupant's stale pages — are masked here, and the
     two partials merge via log-sum-exp (`seqpar.merge_two`).
 
+    Two callers share this oracle: chunked prefill (one slot per call —
+    scalar `start`, `q_pos` [S]) and speculative-decode verification
+    (the whole decode batch at once — ragged per-row `start` [B] and
+    `q_pos` [B, S], since every slot sits at its own length).
+
     Returns locally-normalized (o [B,S,H,dh], m [B,S,H], ℓ [B,S,H]); a
-    query whose whole window lies inside the chunk gets ℓ = 0 and thus
+    query whose whole window lies inside the span gets ℓ = 0 and thus
     zero weight in the merge.
     """
     B, K, NP = k_pages.shape[:3]
@@ -127,11 +133,17 @@ def paged_chunk_attention_ref(
     dt = k_pages.dtype
     qg = (q.astype(jnp.float32) * scale).astype(dt).reshape(B, S, K, G, dh)
 
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, S))
+
     pos = page_base[:, :, None] + jnp.arange(T)[None, None, :]   # [B, NP, T]
-    valid = (page_base >= 0)[:, :, None] & (pos < start)
+    valid = (page_base >= 0)[:, :, None] & (pos < start[:, None, None])
     mask = valid[:, None, None, None]                  # [B, 1, 1, 1, NP, T]
     if window is not None:
-        in_w = pos[:, None] > (q_pos[None, :, None, None] - window)
+        in_w = (pos[:, None]                           # [B, S, NP, T]
+                > (q_pos[:, :, None, None] - window))
         mask = mask & in_w[:, None, None]              # [B, 1, 1, S, NP, T]
 
     s = jnp.einsum("bskgd,bkntd->bkgsnt", qg, k_pages,

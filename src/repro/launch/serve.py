@@ -15,6 +15,7 @@ import numpy as np
 from repro.configs import EngineConfig
 from repro.core.dse import recommend_engine_config
 from repro.serving.api import (KVNANDServer, SamplingParams, ServerConfig,
+                               accepted_tokens_per_step,
                                latency_percentile)
 
 
@@ -48,6 +49,11 @@ def serve(argv=None):
     ap.add_argument("--total-pages", type=int, default=0,
                     help="shared-pool size in pages (0: slots × pages "
                     "per max_context — byte parity with the stripes)")
+    ap.add_argument("--speculation-k", type=int, default=None,
+                    help="draft tokens verified per decode step "
+                    "(prompt-lookup self-drafting, DESIGN.md §11); "
+                    "0 forces sequential decode, unset defers to the "
+                    "EngineConfig (e.g. a --use-dse pick)")
     args = ap.parse_args(argv)
 
     pool_kw = dict(shared_pool=args.shared_pool,
@@ -63,11 +69,14 @@ def serve(argv=None):
         eng = EngineConfig(page_tokens=16, uniform_lengths=False,
                            **pool_kw)
 
+    spec_k = (args.speculation_k if args.speculation_k is not None
+              else eng.speculation_k)
     server = KVNANDServer(ServerConfig(
         arch=args.arch, reduced=args.reduced, engine=eng,
         scheduler=args.scheduler, batch_slots=args.slots,
         max_context=args.max_context,
-        prefill_chunk_tokens=args.chunk_tokens))
+        prefill_chunk_tokens=args.chunk_tokens,
+        speculation_k=args.speculation_k))
     cfg = server.cfg
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
@@ -94,6 +103,13 @@ def serve(argv=None):
           f"TPOT p50/p95 {latency_percentile(tpots, 50) * 1e3:.0f}/"
           f"{latency_percentile(tpots, 95) * 1e3:.0f} ms "
           "(CPU; first requests carry jit compiles)")
+    if spec_k > 0 and st["spec_steps"]:
+        per_step = accepted_tokens_per_step(st["spec_accepted"],
+                                            st["spec_steps"])
+        print(f"[serve] speculation k={spec_k}: "
+              f"{per_step:.2f} tokens/verify-step "
+              f"({st['spec_accepted']}/{st['spec_drafted']} drafts "
+              "accepted)")
     if args.shared_pool and st["pool_total_pages"]:
         hit_rate = st["prefix_hit_pages"] / max(st["prompt_pages"], 1)
         print(f"[serve] shared pool: peak {st['pool_peak_pages']}/"

@@ -21,11 +21,15 @@ Everything a caller needs to serve mixed multi-user traffic lives here:
     incremental use, and `abort()` for cancellation at any stage —
     queued, mid-chunked-prefill, or decoding — with shared-pool pages
     returned through the allocator, refcounts intact.
+    `ServerConfig.speculation_k` turns decode steps into draft-and-
+    verify steps (DESIGN.md §11) with per-request acceptance stats on
+    `RequestOutput`.
 
 The deep half of the design — per-slot sampling params consumed as
 traced arrays INSIDE the jitted decode step, so a batch mixing any
 number of distinct `SamplingParams` costs exactly one compile — lives in
 `serving/sampler.py` and `serving/scheduler.py`; see DESIGN.md §10.
+The full reference for this surface is docs/api.md.
 """
 from __future__ import annotations
 
@@ -44,14 +48,41 @@ from repro.serving.scheduler import (ContinuousBatcher, Request,
                                      SpliceBatcher)
 
 __all__ = ["SamplingParams", "RequestOutput", "StreamEvent",
-           "ServerConfig", "KVNANDServer", "latency_percentile"]
+           "ServerConfig", "KVNANDServer", "latency_percentile",
+           "accepted_tokens_per_step"]
+
+
+def accepted_tokens_per_step(accepted: int, steps: int) -> Optional[float]:
+    """Mean tokens emitted per verify step: `steps` spans each emitted
+    their accepted drafts plus the correction/bonus token.  None when
+    nothing decoded speculatively — the ONE definition shared by
+    `RequestOutput`, `launch/serve.py`'s report, and the
+    `serving/spec/accepted_per_step` bench row."""
+    if steps == 0:
+        return None
+    return (accepted + steps) / steps
 
 _SCHEDULERS = {"interleaved": ContinuousBatcher, "splice": SpliceBatcher}
 
 
 @dataclasses.dataclass(frozen=True)
 class ServerConfig:
-    """Everything needed to stand up a `KVNANDServer`."""
+    """Everything needed to stand up a `KVNANDServer`.
+
+    ``speculation_k`` turns every decode step into a draft-and-verify
+    step: each running request drafts up to k tokens by prompt lookup
+    over its own history and the engine verifies the span in one
+    forward pass (DESIGN.md §11).  Outputs are token-identical to
+    sequential decoding (greedy and seeded sampling alike); only the
+    tokens-per-step changes.  (For quantized kv8/kv4 pools the span
+    logits match sequential decode up to the format's own quantization
+    noise — DESIGN.md §11 — so identity there is empirical, not a
+    floating-point guarantee.)  ``None`` defers to
+    ``EngineConfig.speculation_k`` (which `core.dse
+    .recommend_engine_config` can set from the flash model); ``0``
+    forces sequential decode.  Per-request opt-out / tighter caps:
+    `SamplingParams.speculation`.
+    """
     arch: str = "qwen1.5-0.5b"
     reduced: bool = False           # paper-scale vs CI-scale model dims
     engine: Optional[EngineConfig] = None   # None -> paged ragged default
@@ -62,12 +93,16 @@ class ServerConfig:
     step_token_budget: Optional[int] = None
     seed: int = 0                   # params init + default request streams
     max_steps: int = 100_000        # drain guard for generate()/run()
+    speculation_k: Optional[int] = None     # None -> engine.speculation_k
 
     def __post_init__(self):
         if self.scheduler not in _SCHEDULERS:
             raise ValueError(
                 f"unknown scheduler {self.scheduler!r}; pick one of "
                 f"{sorted(_SCHEDULERS)}")
+        if self.speculation_k is not None and self.speculation_k < 0:
+            raise ValueError(f"speculation_k must be >= 0, "
+                             f"got {self.speculation_k}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +120,10 @@ class StreamEvent:
 
 @dataclasses.dataclass
 class RequestOutput:
-    """A finished request, with timing counters for serving metrics."""
+    """A finished request, with timing counters for serving metrics and
+    — when the server ran speculative decoding — per-request acceptance
+    stats (`spec_steps` verify steps, `spec_drafted` offered drafts,
+    `spec_accepted` accepted drafts; all 0 under sequential decode)."""
     uid: int
     prompt: List[int]
     token_ids: List[int]
@@ -94,6 +132,9 @@ class RequestOutput:
     submit_time: float
     first_token_time: Optional[float]   # None: aborted before any token
     finish_time: float
+    spec_steps: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -101,6 +142,16 @@ class RequestOutput:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.submit_time
+
+    @property
+    def accepted_tokens_per_step(self) -> Optional[float]:
+        """Mean tokens emitted per verify step (accepted drafts + the
+        correction/bonus token); 1.0 means drafting never helped, None
+        when the request never decoded speculatively (steps where the
+        request could offer no draft — opt-out, last-token budget —
+        run sequentially and are not counted)."""
+        return accepted_tokens_per_step(self.spec_accepted,
+                                        self.spec_steps)
 
     @property
     def tpot(self) -> Optional[float]:
@@ -129,12 +180,17 @@ class KVNANDServer:
         rt = rt or Runtime()
         if params is None:
             params = Model(cfg, rt).init(jax.random.PRNGKey(config.seed))
+        spec_k = config.speculation_k
+        if spec_k is None:
+            spec_k = (config.engine.speculation_k
+                      if config.engine is not None else 0)
         self._batcher = _SCHEDULERS[config.scheduler](
             cfg, params, batch_slots=config.batch_slots,
             max_context=config.max_context, eng=config.engine, rt=rt,
             seed=config.seed,
             prefill_chunk_tokens=config.prefill_chunk_tokens,
-            step_token_budget=config.step_token_budget)
+            step_token_budget=config.step_token_budget,
+            speculation_k=spec_k)
         self._requests: Dict[int, Request] = {}
         self._streamed: Dict[int, int] = {}
         self._done_emitted: set = set()
@@ -266,7 +322,9 @@ class KVNANDServer:
             uid=uid, prompt=list(req.prompt), token_ids=list(req.output),
             logprobs=list(req.logprobs) if req.params.logprobs else None,
             finish_reason=req.finish_reason, submit_time=req.submit_ts,
-            first_token_time=req.first_ts, finish_time=req.finish_ts)
+            first_token_time=req.first_ts, finish_time=req.finish_ts,
+            spec_steps=req.spec_steps, spec_drafted=req.spec_drafted,
+            spec_accepted=req.spec_accepted)
 
     def outputs(self) -> List[RequestOutput]:
         """Every finished, unreleased request, in uid order."""

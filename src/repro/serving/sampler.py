@@ -44,6 +44,13 @@ class SamplingParams:
     `logprobs=True` records the log-probability (from the raw, pad-masked
     distribution — independent of temperature/filters) of each sampled
     token.
+    `speculation` caps how many prompt-lookup draft tokens may be
+    verified for THIS request per step when the server runs speculative
+    decoding (``ServerConfig.speculation_k``): None accepts the server
+    default, 0 opts the request out of drafting entirely.  The knob only
+    changes how many tokens a step can emit — never which tokens: the
+    accept rule samples the target distribution from the request's own
+    PRNG stream (see `speculative_accept`).
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -52,6 +59,7 @@ class SamplingParams:
     max_new_tokens: int = 16
     stop_token_ids: Tuple[int, ...] = ()
     logprobs: bool = False
+    speculation: Optional[int] = None
 
     def __post_init__(self):
         if self.temperature < 0.0:
@@ -65,6 +73,10 @@ class SamplingParams:
         if self.max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, "
                              f"got {self.max_new_tokens}")
+        if self.speculation is not None and self.speculation < 0:
+            raise ValueError(f"speculation must be >= 0 (0 disables, "
+                             f"None takes the server default), "
+                             f"got {self.speculation}")
         object.__setattr__(self, "stop_token_ids",
                            tuple(int(t) for t in self.stop_token_ids))
 
@@ -169,3 +181,50 @@ def sample(logits: jax.Array, rng: jax.Array, *, true_vocab: int,
                                    temperature=temperature, top_k=top_k,
                                    top_p=top_p)
     return toks
+
+
+def speculative_accept(logits: jax.Array, drafts: jax.Array,
+                       seeds: jax.Array, positions: jax.Array,
+                       allowed: jax.Array, *, true_vocab: int,
+                       temperature=0.0, top_k=0, top_p=1.0):
+    """Draft-and-verify acceptance over a k-token span (traceable).
+
+    logits: [B, S, V] — span logits from `KVNANDEngine.verify_step`;
+    position j scored the j-th span input token (the last emitted token
+    for j = 0, drafts thereafter), so logits[:, j] is the target
+    distribution of output token ``positions + j``.
+    drafts: [B, S-1] drafted token ids; seeds/positions: [B] per-request
+    stream state (tokens emitted so far); allowed: [B] per-row cap on
+    accepted drafts (0 degrades the row to a plain decode step).
+
+    Accept rule: sample EVERY span position from the request's own
+    ``fold_in(seed, positions + j)`` stream — exactly the key sequential
+    decode would use at that position — and accept draft j while the
+    sampled token equals it.  The emitted tokens are the SAMPLED ones
+    (``acc`` accepted drafts, which equal their samples, plus the first
+    mismatching sample as the correction / bonus token), so the output
+    sequence is distributed identically to non-speculative decoding —
+    bit-exact greedy-equivalent at temperature 0 (argmax ignores the
+    keys), same-stream sampling otherwise — and drafts can only change
+    how MANY tokens a step emits, never which.
+
+    Returns (tokens [B, S], logprobs [B, S], acc [B]): row i emits
+    ``tokens[i, :acc[i] + 1]``.
+    """
+    B, S, V = logits.shape
+    seeds_f = jnp.repeat(jnp.asarray(seeds, jnp.uint32), S)
+    pos_f = (jnp.asarray(positions, jnp.int32)[:, None]
+             + jnp.arange(S, dtype=jnp.int32)[None]).reshape(-1)
+    rep = lambda a: jnp.repeat(jnp.broadcast_to(              # noqa: E731
+        jnp.asarray(a), (B,)), S)
+    toks, lps = sample_with_logprobs(
+        logits.reshape(B * S, V), request_keys(seeds_f, pos_f),
+        true_vocab=true_vocab, temperature=rep(temperature),
+        top_k=rep(top_k), top_p=rep(top_p))
+    toks = toks.reshape(B, S)
+    lps = lps.reshape(B, S)
+    match = (toks[:, :-1] == drafts) & \
+        (jnp.arange(S - 1, dtype=jnp.int32)[None]
+         < jnp.asarray(allowed, jnp.int32)[:, None])
+    acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    return toks, lps, acc

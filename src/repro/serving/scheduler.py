@@ -82,8 +82,10 @@ from repro.core.engine import KVNANDEngine
 from repro.core.page_alloc import (CacheHit, OutOfPages, PageAllocator,
                                    PrefixCache)
 from repro.models.transformer import Runtime
+from repro.serving.draft import propose_draft
 from repro.serving.sampler import (SamplingParams, request_keys,
-                                   sample_with_logprobs)
+                                   sample_with_logprobs,
+                                   speculative_accept)
 
 MIN_PROMPT_BUCKET = 16
 
@@ -102,7 +104,9 @@ def _sample_one(lg, seeds, pos, t, k, p, *, true_vocab):
 class Request:
     """One in-flight request.  `params` carries the per-request sampling
     knobs (defaulted from the batcher's `temperature`/`max_new` at submit
-    for legacy callers); timing marks feed `RequestOutput`'s TTFT/TPOT.
+    for legacy callers); timing marks feed `RequestOutput`'s TTFT/TPOT;
+    the `spec_*` counters feed its acceptance stats when the scheduler
+    runs speculative decoding.
     """
     uid: int
     prompt: List[int]
@@ -115,6 +119,9 @@ class Request:
     submit_ts: Optional[float] = None
     first_ts: Optional[float] = None
     finish_ts: Optional[float] = None
+    spec_steps: int = 0       # verify steps this request decoded in
+    spec_drafted: int = 0     # draft tokens offered for verification
+    spec_accepted: int = 0    # draft tokens accepted
 
 
 def bucket_length(n: int, lo: int = MIN_PROMPT_BUCKET,
@@ -146,7 +153,8 @@ class ContinuousBatcher:
                  rt: Optional[Runtime] = None, temperature: float = 0.0,
                  seed: int = 0, bucket_prompts: bool = True,
                  prefill_chunk_tokens: int = 64,
-                 step_token_budget: Optional[int] = None):
+                 step_token_budget: Optional[int] = None,
+                 speculation_k: int = 0):
         eng = eng or EngineConfig(page_tokens=16, uniform_lengths=False)
         if eng.uniform_lengths:
             raise ValueError(
@@ -194,6 +202,19 @@ class ContinuousBatcher:
         self._topk = np.zeros(batch_slots, np.int32)
         self._topp = np.ones(batch_slots, np.float32)
         self._seeds = np.zeros(batch_slots, np.uint32)
+        # draft-and-verify speculative decoding (DESIGN.md §11): every
+        # decode step becomes a k-token prompt-lookup draft + one-pass
+        # verification; 0 keeps the sequential decode path
+        if speculation_k < 0:
+            raise ValueError(f"speculation_k must be >= 0, "
+                             f"got {speculation_k}")
+        if speculation_k > 0 and (cfg.family in ("ssm", "hybrid")
+                                  or cfg.is_encoder_decoder):
+            raise ValueError(
+                f"{cfg.name}: speculative decoding needs rollback-able "
+                "paged KV; recurrent/encoder-decoder state cannot roll "
+                "back — run with speculation_k=0")
+        self.spec_k = speculation_k
 
         def _decode_fn(p, c, t, a, temps, tk, tp, seeds, pos):
             logits, c = self.engine.decode_step(p, c, t, active=a)
@@ -204,6 +225,24 @@ class ContinuousBatcher:
             return toks, lps, c
 
         self._decode = jax.jit(_decode_fn, donate_argnums=(1,))
+
+        def _verify_fn(p, c, t, a, allowed, temps, tk, tp, seeds, pos):
+            # sampling stays a scheduler concern: the engine calls back
+            # into `speculative_accept` with the span logits, so the one
+            # jitted step covers forward + accept + gated span append
+            def _accept(logits):
+                toks, lps, acc = speculative_accept(
+                    logits, t[:, 1:], seeds, pos, allowed,
+                    true_vocab=self.cfg.vocab_size, temperature=temps,
+                    top_k=tk, top_p=tp)
+                return acc, (toks, lps, acc)
+
+            aux, c = self.engine.verify_step(p, c, t, accept=_accept,
+                                             active=a)
+            return aux, c
+
+        self._verify = (jax.jit(_verify_fn, donate_argnums=(1,))
+                        if speculation_k > 0 else None)
         self._chunk_first = jax.jit(
             lambda p, c, t, s, st, n: self.engine.prefill_chunk(
                 p, c, {"tokens": t}, s, st, n, first=True),
@@ -217,7 +256,9 @@ class ContinuousBatcher:
                       "decode_tokens": 0, "decode_stall_tokens": 0,
                       "compiles": 0, "prefix_hit_pages": 0,
                       "prompt_pages": 0, "cow_copies": 0,
-                      "pool_peak_pages": 0, "pool_total_pages": 0}
+                      "pool_peak_pages": 0, "pool_total_pages": 0,
+                      "spec_steps": 0, "spec_drafted": 0,
+                      "spec_accepted": 0}
         self._compile_keys = set()
         if self.shared:
             self._init_shared_pool(eng)
@@ -633,7 +674,11 @@ class ContinuousBatcher:
         self._admit()
         n_decoding = sum(1 for i, r in enumerate(self.slots)
                          if r is not None and i not in self._prefill_live)
-        budget = self.step_token_budget - n_decoding
+        # a verify step processes spec_k+1 query tokens per decoding
+        # slot — charge the budget what the step actually computes, so
+        # prefill-chunk packing doesn't overshoot under speculation
+        per_slot = self.spec_k + 1 if self.spec_k > 0 else 1
+        budget = self.step_token_budget - n_decoding * per_slot
         chunks_done = 0
         for i, ps in sorted(self._prefill_live.items(),
                             key=lambda kv: kv[1].order):
@@ -652,12 +697,21 @@ class ContinuousBatcher:
         return decoded + chunks_done
 
     def _decode_batch(self, active: List[int]) -> int:
-        """One masked decode over `active` slots: sample each row through
-        its OWN params/PRNG stream inside the jitted step, advance
-        lengths, sweep completions (shared by both schedulers — the
-        parity pair must never diverge on this body)."""
+        """One decode step over `active` slots (shared by both
+        schedulers — the parity pair must never diverge on this body).
+        With ``speculation_k > 0`` the step runs draft-and-verify —
+        same streams, same emitted tokens, up to k+1 of them per slot;
+        otherwise (or when no row may accept) the sequential step."""
         if not active:
             return 0
+        if self.spec_k > 0:
+            return self._verify_batch(active)
+        return self._sequential_batch(active)
+
+    def _sequential_batch(self, active: List[int]) -> int:
+        """One masked decode over `active` slots: sample each row through
+        its OWN params/PRNG stream inside the jitted step, advance
+        lengths, sweep completions."""
         tokens = np.zeros((self.B, 1), np.int32)
         mask = np.zeros(self.B, bool)
         positions = np.zeros(self.B, np.int32)
@@ -690,6 +744,116 @@ class ContinuousBatcher:
             if (self.slots[i] is req
                     and self._lengths[i] + 1 >= self.max_context):
                 self._finish(i, "capacity")
+        return len(active)
+
+    def _rollback_pages(self, i: int):
+        """Host half of the speculative rollback: logical pages allocated
+        for the span but never reached by an accepted token go back to
+        the allocator, and the slot's worst-case reservation is restored
+        — refcounts and `_outstanding` exactly as if the pages had never
+        been handed out.  (The device half is the write gate: rejected
+        positions were dropped, so the freed pages hold no live data;
+        the stale table entries they leave sit past `lengths` and stay
+        data-invalid until `_ensure_page` remaps them.)"""
+        if not self.shared or self.alloc is None:
+            return
+        last = (int(self._lengths[i]) - 1) // self.engine.eng.page_tokens
+        for lp in [p for p in self._slot_pages[i] if p > last]:
+            self.alloc.free([self._slot_pages[i].pop(lp)])
+            self._slot_shared[i].discard(lp)
+            self._resv[i] += 1
+            self._outstanding += 1
+
+    def _verify_batch(self, active: List[int]) -> int:
+        """One draft-and-verify step over `active` slots: each drafts up
+        to `spec_k` tokens by prompt lookup over its own history, the
+        engine scores the whole span in ONE jitted pass, and every slot
+        emits its accepted prefix plus the correction/bonus token through
+        the same `_emit_token` finish rules and per-request PRNG streams
+        as the sequential path — so outputs are identical token for
+        token, only the tokens-per-step changes."""
+        S = self.spec_k + 1
+        T = self.engine.eng.page_tokens
+        tokens = np.zeros((self.B, S), np.int32)
+        mask = np.zeros(self.B, bool)
+        allowed = np.zeros(self.B, np.int32)
+        positions = np.zeros(self.B, np.int32)
+        reqs: Dict[int, Request] = {}
+        for i in active:
+            req = self.slots[i]
+            reqs[i] = req
+            cap = req.params.speculation
+            k_eff = self.spec_k if cap is None else min(cap, self.spec_k)
+            # a slot may accept only as many drafts as its remaining
+            # max_new budget (minus the guaranteed correction token) and
+            # its slot capacity allow — so the span can never write past
+            # the reservation sequential decode would have used
+            allowed[i] = max(0, min(
+                k_eff, req.max_new - len(req.output) - 1,
+                self.max_context - 2 - int(self._lengths[i])))
+            draft = (propose_draft(req.prompt + req.output, self.spec_k)
+                     if allowed[i] > 0 else [0] * self.spec_k)
+            tokens[i, 0] = req.output[-1]
+            tokens[i, 1:] = draft
+            mask[i] = True
+            positions[i] = len(req.output)
+        if not allowed.any():
+            # no row may accept anything (per-request opt-outs, or every
+            # slot at its max_new/capacity edge): the span forward would
+            # be a k+1×-wide way to emit one token per slot — take the
+            # sequential step instead
+            return self._sequential_batch(active)
+        if self.shared and self.alloc is not None:
+            # back every page the span MAY write (positions up to
+            # lengths + allowed): lazy alloc or COW, exactly like the
+            # sequential path — just up to ceil(S/T)+1 pages at once
+            for i in active:
+                lo = int(self._lengths[i]) // T
+                hi = (int(self._lengths[i]) + int(allowed[i])) // T
+                for lp in range(lo, hi + 1):
+                    self._ensure_page(i, lp)
+            self._push_tables()
+        self._count_compile("verify", self.B, S)
+        (toks, lps, acc), self.cache = self._verify(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(mask), jnp.asarray(allowed),
+            jnp.asarray(self._temps), jnp.asarray(self._topk),
+            jnp.asarray(self._topp), jnp.asarray(self._seeds),
+            jnp.asarray(positions))
+        toks, lps, acc = np.asarray(toks), np.asarray(lps), np.asarray(acc)
+        emitted = 0
+        for i in active:
+            req = reqs[i]
+            n = int(acc[i]) + 1           # tokens the device appended
+            # spec accounting counts ROW-steps that actually offered a
+            # draft (matching the per-request counter): the fleet-level
+            # accepted_tokens_per_step is then the weighted mean of the
+            # per-request values, undiluted by opt-out rows and not
+            # inflated by the slot count
+            if int(allowed[i]) > 0:
+                req.spec_steps += 1
+                req.spec_drafted += int(allowed[i])
+                self.stats["spec_steps"] += 1
+                self.stats["spec_drafted"] += int(allowed[i])
+            emitted_i = 0
+            for j in range(n):
+                if self.slots[i] is not req:
+                    break                 # stop token finished mid-span
+                self._emit_token(i, req, int(toks[i, j]), float(lps[i, j]))
+                emitted_i += 1
+            emitted += emitted_i
+            # count only EMITTED accepted drafts (a stop-token finish
+            # truncates the span): every counted verify step thus
+            # contributes exactly spec_accepted + 1 tokens
+            if int(allowed[i]) > 0:
+                req.spec_accepted += emitted_i - 1
+                self.stats["spec_accepted"] += emitted_i - 1
+            if self.slots[i] is req:
+                self._lengths[i] += n
+                self._rollback_pages(i)
+                if self._lengths[i] + 1 >= self.max_context:
+                    self._finish(i, "capacity")
+        self.stats["decode_tokens"] += emitted
         return len(active)
 
     def run_to_completion(self, max_steps: int = 10_000):
