@@ -59,6 +59,13 @@ def run():
              f"{q_bytes / us / 1e3:.1f} GB/s kv stream cpu; "
              f"{kv_bytes / q_bytes:.2f}x fewer kv bytes/step vs bf16")
 
+    # 100K-context paged decode: the split-page `partitions` sweep.
+    # 1600 pages × 64 tokens = 102400 resident tokens, one decode query.
+    # partitions > 1 bounds each partition's dequant copies and score
+    # tensor at 1/P of the monolithic walk — the cache-residency win the
+    # auto ladder (resolve_partitions) banks on at long context.
+    _bench_100k()
+
     # quantized GEMV
     D, F = 1024, 4096
     w = jax.random.normal(ks[0], (D, F)) * 0.05
@@ -87,6 +94,65 @@ def run():
         us, _ = time_fn(lambda: jax.block_until_ready(
             jfn(r, kkv, vv, lw, u, s0)))
         emit(f"kernels/wkv6_{name}_512", us, f"{Sw} tokens")
+
+
+def _bench_100k():
+    from repro.core.quant import quantize_kv_page
+    B, K, H, dh = 1, 2, 8, 64
+    NP, T = 1600, 64                       # divisible by 4 and 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    kp = jax.random.normal(ks[0], (B, K, NP, T, dh), jnp.float32) * 0.3
+    vp = jax.random.normal(ks[1], (B, K, NP, T, dh), jnp.float32) * 0.3
+    qd = jax.random.normal(ks[2], (B, H, dh), jnp.float32)
+    base = jnp.broadcast_to((jnp.arange(NP) * T)[None], (B, NP)
+                            ).astype(jnp.int32)
+    length = jnp.full((B,), NP * T, jnp.int32)
+    table = jnp.broadcast_to(jnp.arange(NP, dtype=jnp.int32)[None],
+                             (B, NP))
+
+    for fmt in ("f32", "kv8", "kv4"):
+        if fmt == "f32":
+            kk, vv, sk, sv = kp, vp, None, None
+            quant = "none"
+        else:
+            quant = fmt
+            kk, sk = quantize_kv_page(kp, fmt)
+            vv, sv = quantize_kv_page(vp, fmt)
+        # shared pool: same pages as one global pool behind an identity
+        # table ([K, NP, Ts, dh] + [K, NP] scales)
+        kk_s, vv_s = kk[0], vv[0]
+        sk_s = None if sk is None else sk[0]
+        sv_s = None if sv is None else sv[0]
+        base_us = {}
+        for layout in ("striped", "shared"):
+            for parts in (1, 4, 16):
+                if layout == "striped":
+                    fn = jax.jit(lambda q_, k_, v_, b_, l_, ks_, vs_,
+                                 quant=quant, parts=parts:
+                                 paged_attention_partial(
+                                     q_, k_, v_, b_, l_, impl="ref",
+                                     kv_quant=quant, k_scale=ks_,
+                                     v_scale=vs_, partitions=parts))
+                    args = (qd, kk, vv, base, length, sk, sv)
+                else:
+                    fn = jax.jit(lambda q_, k_, v_, b_, l_, ks_, vs_, t_,
+                                 quant=quant, parts=parts:
+                                 paged_attention_partial(
+                                     q_, k_, v_, b_, l_, impl="ref",
+                                     kv_quant=quant, k_scale=ks_,
+                                     v_scale=vs_, page_table=t_,
+                                     partitions=parts))
+                    args = (qd, kk_s, vv_s, base, length, sk_s, sv_s,
+                            table)
+                us, _ = time_fn(lambda: jax.block_until_ready(fn(*args)))
+                if parts == 1:
+                    base_us[layout] = us
+                    note = f"{NP * T} tokens, monolithic walk"
+                else:
+                    note = (f"{NP * T} tokens, {parts}-way split; "
+                            f"{base_us[layout] / us:.2f}x vs p1")
+                emit(f"kernels/paged_attention_100k/{fmt}/{layout}"
+                     f"/p{parts}", us, note)
 
 
 if __name__ == "__main__":

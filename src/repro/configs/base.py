@@ -246,6 +246,10 @@ class EngineConfig:
     # `ServerConfig.speculation_k` overrides per server.
     speculation_k: int = 0
     attn_impl: str = "auto"         # "auto" | "pallas" | "ref" | "interpret"
+    # split-page attention: contiguous page-walk partitions merged via
+    # the LSE merge core (0 = auto from the page count; must divide the
+    # per-device page count when set).  DSE-searchable like kv_quant.
+    attn_partitions: int = 0
     gemv_impl: str = "auto"
     # training-side knobs
     remat: str = "block"            # "none" | "block" | "full"
@@ -263,6 +267,9 @@ class EngineConfig:
         if self.speculation_k < 0:
             raise ValueError(f"speculation_k must be >= 0, "
                              f"got {self.speculation_k}")
+        if self.attn_partitions < 0:
+            raise ValueError(f"attn_partitions must be >= 0 (0 = auto), "
+                             f"got {self.attn_partitions}")
 
 
 # ---------------------------------------------------------------------------

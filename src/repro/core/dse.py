@@ -40,6 +40,11 @@ KV_FORMATS = {0: "none", 8: "kv8", 4: "kv4"}
 # speculation depths swept by the speculation_k axis (0 = sequential)
 SPEC_KS = (0, 2, 4, 8)
 
+# split-page attention partition counts swept by the attn_partitions
+# axis (1 = monolithic walk); mirrors the engine's resolve_partitions
+# auto ladder.
+ATTN_PARTITIONS = (1, 4, 16)
+
 
 def enumerate_configs(total_dies: int = 8, wbits: int = 4, abits: int = 16,
                       kv_bits: int = 0) -> List[fs.SystemConfig]:
@@ -147,6 +152,26 @@ def recommend_speculation_k(sys: fs.SystemConfig, cfg: ModelConfig,
     return best_k if base / max(best_lat, 1e-30) >= min_speedup else 0
 
 
+def recommend_attn_partitions(sys: fs.SystemConfig, cfg: ModelConfig,
+                              seq: int,
+                              partition_counts=ATTN_PARTITIONS,
+                              min_speedup: float = 1.02) -> int:
+    """Pick the split-page partition count that minimizes decode latency
+    on `sys`.  Each extra partition buys plane-level KV-read concurrency
+    but costs one more NPU merge round trip, so short contexts (where
+    the walk is already cheap) keep partitions = 1; the split must BEAT
+    the monolithic walk by `min_speedup` to be recommended."""
+    base = fs.decode_token_latency(sys, cfg, seq).total
+    best_p, best_lat = 1, base
+    for p in partition_counts:
+        if p <= 1:
+            continue
+        lat = fs.decode_token_latency(sys, cfg, seq, partitions=p).total
+        if lat < best_lat:
+            best_p, best_lat = p, lat
+    return best_p if base / max(best_lat, 1e-30) >= min_speedup else 1
+
+
 def recommend_engine_config(arch: str, seq: int, *,
                             total_dies: int = 16,
                             allow_kv_quant: bool = True,
@@ -169,6 +194,11 @@ def recommend_engine_config(arch: str, seq: int, *,
                         minimizes expected per-token latency on the
                         winning system (`recommend_speculation_k`);
                         0 / default keeps sequential decode.
+    attn_partitions  -> the split-page partition count that minimizes
+                        decode latency on the winning system
+                        (`recommend_attn_partitions`): long contexts
+                        pick a plane-parallel split, short contexts
+                        keep the monolithic walk.
     """
     cfg = get_config(arch)
     kv_axis = tuple(KV_FORMATS) if allow_kv_quant else (0,)
@@ -192,10 +222,12 @@ def recommend_engine_config(arch: str, seq: int, *,
     if spec_accept_rate > 0.0:
         spec_k = recommend_speculation_k(_system_of(p), cfg, seq,
                                          spec_accept_rate)
+    attn_parts = recommend_attn_partitions(_system_of(p), cfg, seq)
     return EngineConfig(variant=variant, quant=quant,
                         hg_pipeline=(variant == "discrete"),
                         kv_quant=KV_FORMATS[p.kv_bits],
-                        speculation_k=spec_k)
+                        speculation_k=spec_k,
+                        attn_partitions=attn_parts)
 
 
 def best_discrete(cfg: ModelConfig, seq: int, total_dies: int = 8,

@@ -170,19 +170,22 @@ class KVNANDEngine:
                 q, kp, vp, base, length, window=window,
                 impl=self.eng.attn_impl, kv_quant=kv_quant,
                 k_scale=ks, v_scale=vs,
-                page_table=table if shared else None)
+                page_table=table if shared else None,
+                partitions=self.eng.attn_partitions)
             return o
         if shared:
             return seqpar.paged_decode_attention_sharded_shared(
                 q, kp, vp, table, base, length, self.mesh, window=window,
                 batch_axes=plan.batch_axes, page_axes=page_axes,
                 impl=self.eng.attn_impl, kv_quant=kv_quant,
-                k_scale=ks, v_scale=vs)
+                k_scale=ks, v_scale=vs,
+                partitions=self.eng.attn_partitions)
         return seqpar.paged_decode_attention_sharded(
             q, kp, vp, base, length, self.mesh, window=window,
             batch_axes=plan.batch_axes, page_axes=page_axes,
             impl=self.eng.attn_impl, kv_quant=kv_quant,
-            k_scale=ks, v_scale=vs)
+            k_scale=ks, v_scale=vs,
+            partitions=self.eng.attn_partitions)
 
     # ------------------------------------------------------------------
     # in-place pool ops (pools carried through the layer scan)
@@ -691,7 +694,8 @@ class KVNANDEngine:
             o2, m2, l2 = paged_chunk_attention(
                 q, kp, vp, base, lengths, positions, window=window,
                 impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks,
-                v_scale=vs, page_table=table if shared else None)
+                v_scale=vs, page_table=table if shared else None,
+                partitions=self.eng.attn_partitions)
             o, m, l = seqpar.merge_two(o, m, l, o2, m2, l2)
             aout = attn_mod.project_out(pl_["attn"], cfg,
                                         o.astype(h.dtype))
@@ -1192,7 +1196,8 @@ class KVNANDEngine:
             return paged_chunk_attention(
                 q, kp, vp, base, ck["start"], ck["q_pos"], window=window,
                 impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks,
-                v_scale=vs, page_table=trow[None])
+                v_scale=vs, page_table=trow[None],
+                partitions=self.eng.attn_partitions)
         Lp, B, K, NP, Ts, dh = pools[kname].shape
         zero = jnp.zeros((), jnp.int32)
         pidx = (idx, ck["slot"], zero, zero, zero, zero)
@@ -1210,10 +1215,12 @@ class KVNANDEngine:
                 q, kp, vp, base, ck["start"], ck["q_pos"], self.mesh,
                 window=window, page_axes=ck["plan"].page_axes_g,
                 impl=self.eng.attn_impl, kv_quant=fmt,
-                k_scale=ks, v_scale=vs)
+                k_scale=ks, v_scale=vs,
+                partitions=self.eng.attn_partitions)
         return paged_chunk_attention(
             q, kp, vp, base, ck["start"], ck["q_pos"], window=window,
-            impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks, v_scale=vs)
+            impl=self.eng.attn_impl, kv_quant=fmt, k_scale=ks, v_scale=vs,
+            partitions=self.eng.attn_partitions)
 
     def _chunk_block(self, pl_, x, positions, is_glob, pools, states,
                      l_idx, g_idx, w_idx):

@@ -204,11 +204,21 @@ def _gemv_time(die: FlashDie, n_dies: int, wb: float, wbits: int,
 
 
 def _attn_terms(sys: SystemConfig, cfg: ModelConfig, seq: int,
-                span: int = 1):
+                span: int = 1, partitions: int = 1):
     """Per-layer Logit+Attend (time, transfer_bytes) on the KV medium.
 
     span > 1: one KV walk serves all span queries (read bytes
     unchanged); Logit/Attend MACs and softmax traffic scale with span.
+
+    partitions > 1 (split-page attention, IFC kinds only): the walk
+    emits a locally-normalized partial per partition, so the NPU's
+    softmax/exchange stream for partition i overlaps the dies' walk of
+    partition i+1 instead of serializing after the full walk — all but
+    the last partition's softmax traffic hides under the walk (to the
+    extent the walk is long enough to hide it), at the cost of one
+    extra NPU merge round trip per partial (`merge_partials`).  Long
+    contexts (walk-bound) win; short contexts pay the merge trips for
+    nothing, which is what drives `recommend_attn_partitions` to 1.
     """
     die, npu = sys.die, sys.npu
     kvb = kv_bytes_layer(cfg, seq, sys.kv_bits_eff)   # K+V bytes
@@ -233,7 +243,15 @@ def _attn_terms(sys: SystemConfig, cfg: ModelConfig, seq: int,
     t_sm = (sm_bytes / (n * die.ext_bw)
             + cfg.n_kv_heads * NPU_ROUNDTRIP
             + (span * cfg.n_heads * seq) / npu.tops)
-    return max(t_read, t_mac) + t_sm, sm_bytes
+    t_walk = max(t_read, t_mac)
+    if partitions > 1:
+        # first partition's softmax cannot start before its walk ends
+        # and the last partition's cannot overlap anything, so at most
+        # (P-1)/P of either stream hides under the other.
+        hidden = (partitions - 1) / partitions * min(t_sm, t_walk)
+        return (t_walk + t_sm - hidden
+                + (partitions - 1) * NPU_ROUNDTRIP), sm_bytes
+    return t_walk + t_sm, sm_bytes
 
 
 def _no_mapping_amplification(sys: SystemConfig, cfg: ModelConfig) -> float:
@@ -273,7 +291,8 @@ class Breakdown:
 
 
 def _step_breakdown(sys: SystemConfig, cfg: ModelConfig, seq: int,
-                    span: int, kv_writes: float) -> Breakdown:
+                    span: int, kv_writes: float,
+                    partitions: int = 1) -> Breakdown:
     """One decode/verify step over `span` tokens writing `kv_writes`
     tokens' KV (sequential decode: span = kv_writes = 1)."""
     die = sys.die
@@ -286,7 +305,7 @@ def _step_breakdown(sys: SystemConfig, cfg: ModelConfig, seq: int,
     b.o_proj = L * _gemv_time(die, n_w, wb["o"], sys.wbits, span)
     b.ffn = L * _gemv_time(die, n_w, wb["ffn_active"], sys.wbits, span)
     b.lm_head = _gemv_time(die, n_w, wb["lm_head"], sys.wbits, span)
-    t_attn, xfer = _attn_terms(sys, cfg, seq, span)
+    t_attn, xfer = _attn_terms(sys, cfg, seq, span, partitions)
     b.attention = L * t_attn
     b.kv_write = kv_writes * _kv_write_time(sys, cfg)
     # activation vectors NPU<->IFC each layer (q, o, ffn in/out)
@@ -304,8 +323,9 @@ def _step_breakdown(sys: SystemConfig, cfg: ModelConfig, seq: int,
 
 
 def decode_token_latency(sys: SystemConfig, cfg: ModelConfig,
-                         seq: int) -> Breakdown:
-    return _step_breakdown(sys, cfg, seq, span=1, kv_writes=1.0)
+                         seq: int, partitions: int = 1) -> Breakdown:
+    return _step_breakdown(sys, cfg, seq, span=1, kv_writes=1.0,
+                           partitions=partitions)
 
 
 def decode_throughput(sys: SystemConfig, cfg: ModelConfig,

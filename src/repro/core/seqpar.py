@@ -59,17 +59,21 @@ def _axis_size(name):
 # ---------------------------------------------------------------------------
 
 def merge_two(o1, m1, l1, o2, m2, l2):
-    """Merge two locally-normalized partial attentions (log-sum-exp)."""
-    m = jnp.maximum(m1, m2)
-    w1 = l1 * jnp.exp(m1 - m)
-    w2 = l2 * jnp.exp(m2 - m)
-    denom = jnp.maximum(w1 + w2, 1e-30)
-    o = (o1 * w1[..., None] + o2 * w2[..., None]) / denom[..., None]
-    return o, m, w1 + w2
+    """Merge two locally-normalized partial attentions (log-sum-exp).
+
+    Two-ary convenience over the N-partial merge core
+    (`kernels.paged_attention.merge_partials`) — same math, same
+    empty-partition identity."""
+    from repro.kernels.paged_attention.merge import merge_partials
+    return merge_partials(jnp.stack([o1, o2]), jnp.stack([m1, m2]),
+                          jnp.stack([l1, l2]), axis=0)
 
 
 def combine_partials(o, m, l, axis_names: Sequence[str]):
     """Cross-device merge over mesh axes (inside shard_map).
+
+    The collective twin of `merge_partials`: the same one-max/one-sum
+    reduction, with pmax/psum standing in for the stacked-axis reduce.
 
     o: [..., dh] locally-normalized partial outputs; m/l: [...] stats.
     """
@@ -489,7 +493,8 @@ def sharded_chunk_attention(q, k_pages, v_pages, page_base, start, q_pos,
                             page_axes: Sequence[str] = ("model",),
                             impl: str = "auto",
                             kv_quant: str = "none",
-                            k_scale=None, v_scale=None):
+                            k_scale=None, v_scale=None,
+                            partitions: int = 0):
     """Past-context partial attention of one slot's chunk queries against
     its page-sharded stripe (chunked prefill on a mesh).
 
@@ -513,9 +518,12 @@ def sharded_chunk_attention(q, k_pages, v_pages, page_base, start, q_pos,
     basespec = P(None, _axes_spec(page_axes))
 
     def run(qq, kp, vp, base, st, qp, ks=None, vs=None):
+        # `partitions` splits each shard's LOCAL page walk (resolved
+        # against the local page count inside the op)
         o, m, l = paged_chunk_attention(
             qq, kp, vp, base, st, qp, window=window, impl=impl,
-            kv_quant=kv_quant, k_scale=ks, v_scale=vs)
+            kv_quant=kv_quant, k_scale=ks, v_scale=vs,
+            partitions=partitions)
         if n_page_shards > 1:
             o, m, l = combine_partials_stats(o, m, l, tuple(page_axes))
         return o, m, l
@@ -543,6 +551,7 @@ def paged_decode_attention_sharded(
     append: Optional[Tuple] = None,   # (k_new [B,K,dh], v_new, phys, slot)
     kv_quant: str = "none",
     k_scale=None, v_scale=None,       # [B, K, NP] per-page×head scales
+    partitions: int = 0,              # split of each shard's local walk
 ):
     """q: [B, H, dh]; pages: [B, K, NP, T, dh]; page_base: [B, NP] absolute
     position of each physical page's slot 0 (<0 = unwritten);
@@ -580,7 +589,8 @@ def paged_decode_attention_sharded(
         o, m, l = paged_attention_partial(qq, kp, vp, base, ln,
                                           window=window, is_global=is_global,
                                           impl=impl, kv_quant=kv_quant,
-                                          k_scale=ks, v_scale=vs)
+                                          k_scale=ks, v_scale=vs,
+                                          partitions=partitions)
         if n_page_shards > 1:
             o = combine_partials(o, m, l, tuple(page_axes))
         return o.astype(qq.dtype)
@@ -629,6 +639,7 @@ def paged_decode_attention_sharded_shared(
     impl: str = "auto",
     kv_quant: str = "none",
     k_scale=None, v_scale=None,       # [K, P_total] per-page×head scales
+    partitions: int = 0,              # split of each shard's local walk
 ):
     """q: [B, H, dh]; pages: [K, P_total, T, dh] sharded on P_total;
     page_table: [B, NP] GLOBAL physical indices; page_base: [B, NP] base
@@ -662,7 +673,7 @@ def paged_decode_attention_sharded_shared(
         o, m, l = paged_attention_partial(
             qq, kp, vp, base_l, ln, window=window, is_global=is_global,
             impl=impl, kv_quant=kv_quant, k_scale=ks, v_scale=vs,
-            page_table=tl)
+            page_table=tl, partitions=partitions)
         if n_page_shards > 1:
             o = combine_partials(o, m, l, tuple(page_axes))
         return o.astype(qq.dtype)

@@ -1,3 +1,7 @@
+from repro.kernels.paged_attention.merge import (  # noqa: F401
+    merge_partials,
+    resolve_partitions,
+)
 from repro.kernels.paged_attention.ops import (  # noqa: F401
     paged_attention_partial,
     paged_chunk_attention,

@@ -48,14 +48,23 @@ def _load_pages(ref, ppb: int, T: int, dh: int, kv_quant: str):
 def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
             q_ref, k_ref, v_ref, *refs,              # VMEM blocks (+scales)
             T: int, ppb: int, n_blocks: int, window: Optional[int],
-            scale: float, kv_quant: str):
+            scale: float, kv_quant: str, partitioned: bool = False):
     if kv_quant == "none":
         ks_ref = vs_ref = None
         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = refs
     else:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
-    ib = pl.program_id(2)
+    # partitioned grid (B, K, P, blocks-per-partition): each partition is
+    # an independent walk over its own page range — the scratch online
+    # softmax re-initializes at ITS first block and finalizes into ITS
+    # output slot, and `blk` addresses the global page-block axis
+    if partitioned:
+        ib = pl.program_id(3)
+        blk = pl.program_id(2) * n_blocks + ib
+    else:
+        ib = pl.program_id(2)
+        blk = ib
 
     @pl.when(ib == 0)
     def _init():
@@ -80,7 +89,7 @@ def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
     # data-derived validity from prefetched page bases
     length = len_ref[b]
     slots = jax.lax.broadcasted_iota(jnp.int32, (ppb, T), 1)
-    bases = base_ref[b, pl.dslice(ib * ppb, ppb)]            # [ppb]
+    bases = base_ref[b, pl.dslice(blk * ppb, ppb)]           # [ppb]
     pos = bases[:, None] + slots                             # [ppb, T]
     valid = (bases[:, None] >= 0) & (pos < length)
     if window is not None:
@@ -107,9 +116,14 @@ def _kernel(base_ref, len_ref,                       # scalar prefetch (SMEM)
     @pl.when(ib == n_blocks - 1)
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
-        m_ref[0, 0] = m_scr[...]
-        l_ref[0, 0] = l_scr[...]
+        if partitioned:
+            o_ref[0, 0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+            m_ref[0, 0, 0] = m_scr[...]
+            l_ref[0, 0, 0] = l_scr[...]
+        else:
+            o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+            m_ref[0, 0] = m_scr[...]
+            l_ref[0, 0] = l_scr[...]
 
 
 def _load_page_shared(ref, T: int, dh: int, kv_quant: str):
@@ -126,7 +140,7 @@ def _load_page_shared(ref, T: int, dh: int, kv_quant: str):
 def _kernel_shared(tbl_ref, base_ref, len_ref,       # scalar prefetch (SMEM)
                    q_ref, k_ref, v_ref, *refs,       # VMEM blocks (+scales)
                    T: int, n_blocks: int, window: Optional[int],
-                   scale: float, kv_quant: str):
+                   scale: float, kv_quant: str, partitioned: bool = False):
     """Shared-pool body: identical online softmax to `_kernel`, but each
     grid step streams ONE pool page picked by the prefetched page table
     (the block index map below) — the §IV-D logical→physical walk happens
@@ -137,7 +151,12 @@ def _kernel_shared(tbl_ref, base_ref, len_ref,       # scalar prefetch (SMEM)
     else:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
-    ib = pl.program_id(2)
+    if partitioned:
+        ib = pl.program_id(3)
+        blk = pl.program_id(2) * n_blocks + ib       # global logical page
+    else:
+        ib = pl.program_id(2)
+        blk = ib
 
     @pl.when(ib == 0)
     def _init():
@@ -151,7 +170,7 @@ def _kernel_shared(tbl_ref, base_ref, len_ref,       # scalar prefetch (SMEM)
     v = _load_page_shared(v_ref, T, dh, kv_quant)
 
     length = len_ref[b]
-    base = base_ref[b, ib]
+    base = base_ref[b, blk]
     pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)[0]
     valid = (base >= 0) & (pos < length)
     if window is not None:
@@ -177,9 +196,14 @@ def _kernel_shared(tbl_ref, base_ref, len_ref,       # scalar prefetch (SMEM)
     @pl.when(ib == n_blocks - 1)
     def _finalize():
         ll = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / ll).astype(o_ref.dtype)
-        m_ref[0, 0] = m_scr[...]
-        l_ref[0, 0] = l_scr[...]
+        if partitioned:
+            o_ref[0, 0, 0] = (acc_scr[...] / ll).astype(o_ref.dtype)
+            m_ref[0, 0, 0] = m_scr[...]
+            l_ref[0, 0, 0] = l_scr[...]
+        else:
+            o_ref[0, 0] = (acc_scr[...] / ll).astype(o_ref.dtype)
+            m_ref[0, 0] = m_scr[...]
+            l_ref[0, 0] = l_scr[...]
 
 
 def paged_attention_pallas_shared(
@@ -195,61 +219,91 @@ def paged_attention_pallas_shared(
     kv_quant: str = "none",
     k_scale: Optional[jax.Array] = None,   # [K, P_total] f32
     v_scale: Optional[jax.Array] = None,
+    partitions: int = 1,
 ):
     """Shared-pool paged decode attention: grid (B, K, NP) with the page
     table scalar-prefetched so the BLOCK INDEX MAP addresses the global
     P_total axis directly — one arbitrary pool page per step, no gathered
-    copy of the slot's stripe ever materializes."""
+    copy of the slot's stripe ever materializes.
+
+    partitions > 1 splits the logical page walk into a PARALLEL grid axis
+    — grid (B, K, partitions, NP/partitions) — emitting per-partition
+    partials [B, K, partitions, ...] for the caller to merge
+    (`merge.merge_partials`); the sequential scratch accumulation then
+    only spans one partition's pages (the paper's head-group × split-page
+    parallel read, with NPU-side aggregation)."""
     K, P, Ts, dh = k_pages.shape
     T = 2 * Ts if kv_quant == "kv4" else Ts
     B, NP = page_table.shape
     G = q.shape[2]
     scale = dh ** -0.5
+    assert NP % partitions == 0, (NP, partitions)
+    npp = NP // partitions
 
-    in_specs = [
-        pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, tbl, base, ln:
-                     (b, k, 0, 0)),
-        pl.BlockSpec((1, 1, Ts, dh), lambda b, k, ib, tbl, base, ln:
-                     (k, tbl[b, ib], 0, 0)),
-        pl.BlockSpec((1, 1, Ts, dh), lambda b, k, ib, tbl, base, ln:
-                     (k, tbl[b, ib], 0, 0)),
-    ]
+    if partitions == 1:
+        qspec = pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_:
+                             (b, k, 0, 0))
+        pspec = pl.BlockSpec((1, 1, Ts, dh), lambda b, k, ib, tbl, base, ln:
+                             (k, tbl[b, ib], 0, 0))
+        sspec = pl.BlockSpec((1, 1), lambda b, k, ib, tbl, base, ln:
+                             (k, tbl[b, ib]))
+        grid = (B, K, NP)
+        out_shape = [(B, K, G, dh), (B, K, G, 1), (B, K, G, 1)]
+        out_specs = [
+            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+        ]
+        semantics = ("parallel", "parallel", "arbitrary")
+    else:
+        qspec = pl.BlockSpec((1, 1, G, dh), lambda b, k, pt, ib, *_:
+                             (b, k, 0, 0))
+        pspec = pl.BlockSpec((1, 1, Ts, dh),
+                             lambda b, k, pt, ib, tbl, base, ln:
+                             (k, tbl[b, pt * npp + ib], 0, 0))
+        sspec = pl.BlockSpec((1, 1), lambda b, k, pt, ib, tbl, base, ln:
+                             (k, tbl[b, pt * npp + ib]))
+        grid = (B, K, partitions, npp)
+        out_shape = [(B, K, partitions, G, dh), (B, K, partitions, G, 1),
+                     (B, K, partitions, G, 1)]
+        out_specs = [
+            pl.BlockSpec((1, 1, 1, G, dh), lambda b, k, pt, ib, *_:
+                         (b, k, pt, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G, 1), lambda b, k, pt, ib, *_:
+                         (b, k, pt, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G, 1), lambda b, k, pt, ib, *_:
+                         (b, k, pt, 0, 0)),
+        ]
+        semantics = ("parallel", "parallel", "parallel", "arbitrary")
+
+    in_specs = [qspec, pspec, pspec]
     inputs = [q, k_pages, v_pages]
     if kv_quant != "none":
         assert k_scale is not None and v_scale is not None, kv_quant
-        sspec = pl.BlockSpec((1, 1), lambda b, k, ib, tbl, base, ln:
-                             (k, tbl[b, ib]))
         in_specs += [sspec, sspec]
         inputs += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(B, K, NP),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
-        ],
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, dh), jnp.float32),
         ],
     )
-    kernel = functools.partial(_kernel_shared, T=T, n_blocks=NP,
-                               window=window, scale=scale, kv_quant=kv_quant)
+    kernel = functools.partial(_kernel_shared, T=T, n_blocks=npp,
+                               window=window, scale=scale, kv_quant=kv_quant,
+                               partitioned=(partitions > 1))
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, K, G, dh), jnp.float32),
-            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
-            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
-        ],
+        out_shape=[jax.ShapeDtypeStruct(s, jnp.float32) for s in out_shape],
         interpret=interpret,
         compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=semantics),
     )(page_table.astype(jnp.int32), page_base, length, *inputs)
     return o, m[..., 0], l[..., 0]
 
@@ -267,38 +321,73 @@ def paged_attention_pallas(
     kv_quant: str = "none",
     k_scale: Optional[jax.Array] = None,   # [B, K, NP] f32 per-page scales
     v_scale: Optional[jax.Array] = None,
+    partitions: int = 1,
 ):
+    """Sequence-striped paged decode attention.
+
+    partitions > 1 turns the page-block walk into grid
+    (B, K, partitions, blocks-per-partition): the block axis stays the
+    sequential ("arbitrary") scratch-carrying dim but now only spans one
+    partition's pages, while the partition axis is PARALLEL — each
+    (kv-head, partition) pair is an independent walk whose partial lands
+    in [B, K, partitions, ...] outputs for the caller's
+    `merge.merge_partials`."""
     B, K, NP, Ts, dh = k_pages.shape
     T = 2 * Ts if kv_quant == "kv4" else Ts
     G = q.shape[2]
-    ppb = min(pages_per_block, NP)
-    assert NP % ppb == 0, (NP, ppb)
-    n_blocks = NP // ppb
+    assert NP % partitions == 0, (NP, partitions)
+    npp = NP // partitions
+    ppb = min(pages_per_block, npp)
+    assert npp % ppb == 0, (npp, ppb)
+    n_blocks = npp // ppb
     scale = dh ** -0.5
 
-    in_specs = [
-        pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
-        pl.BlockSpec((1, 1, ppb, Ts, dh),
-                     lambda b, k, ib, *_: (b, k, ib, 0, 0)),
-        pl.BlockSpec((1, 1, ppb, Ts, dh),
-                     lambda b, k, ib, *_: (b, k, ib, 0, 0)),
-    ]
+    if partitions == 1:
+        qspec = pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_:
+                             (b, k, 0, 0))
+        pspec = pl.BlockSpec((1, 1, ppb, Ts, dh),
+                             lambda b, k, ib, *_: (b, k, ib, 0, 0))
+        sspec = pl.BlockSpec((1, 1, ppb), lambda b, k, ib, *_: (b, k, ib))
+        grid = (B, K, n_blocks)
+        out_shape = [(B, K, G, dh), (B, K, G, 1), (B, K, G, 1)]
+        out_specs = [
+            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
+        ]
+        semantics = ("parallel", "parallel", "arbitrary")
+    else:
+        qspec = pl.BlockSpec((1, 1, G, dh), lambda b, k, pt, ib, *_:
+                             (b, k, 0, 0))
+        pspec = pl.BlockSpec((1, 1, ppb, Ts, dh), lambda b, k, pt, ib, *_:
+                             (b, k, pt * n_blocks + ib, 0, 0))
+        sspec = pl.BlockSpec((1, 1, ppb), lambda b, k, pt, ib, *_:
+                             (b, k, pt * n_blocks + ib))
+        grid = (B, K, partitions, n_blocks)
+        out_shape = [(B, K, partitions, G, dh), (B, K, partitions, G, 1),
+                     (B, K, partitions, G, 1)]
+        out_specs = [
+            pl.BlockSpec((1, 1, 1, G, dh), lambda b, k, pt, ib, *_:
+                         (b, k, pt, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G, 1), lambda b, k, pt, ib, *_:
+                         (b, k, pt, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G, 1), lambda b, k, pt, ib, *_:
+                         (b, k, pt, 0, 0)),
+        ]
+        semantics = ("parallel", "parallel", "parallel", "arbitrary")
+
+    in_specs = [qspec, pspec, pspec]
     inputs = [q, k_pages, v_pages]
     if kv_quant != "none":
         assert k_scale is not None and v_scale is not None, kv_quant
-        sspec = pl.BlockSpec((1, 1, ppb), lambda b, k, ib, *_: (b, k, ib))
         in_specs += [sspec, sspec]
         inputs += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, K, n_blocks),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((1, 1, G, dh), lambda b, k, ib, *_: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, G, 1), lambda b, k, ib, *_: (b, k, 0, 0)),
-        ],
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -306,17 +395,14 @@ def paged_attention_pallas(
         ],
     )
     kernel = functools.partial(_kernel, T=T, ppb=ppb, n_blocks=n_blocks,
-                               window=window, scale=scale, kv_quant=kv_quant)
+                               window=window, scale=scale, kv_quant=kv_quant,
+                               partitioned=(partitions > 1))
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, K, G, dh), jnp.float32),
-            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
-            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
-        ],
+        out_shape=[jax.ShapeDtypeStruct(s, jnp.float32) for s in out_shape],
         interpret=interpret,
         compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=semantics),
     )(page_base, length, *inputs)
     return o, m[..., 0], l[..., 0]

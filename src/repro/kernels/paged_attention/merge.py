@@ -1,0 +1,76 @@
+"""N-partial log-sum-exp merge core (the paper's NPU softmax aggregation).
+
+Every attention entry point — decode (`paged_attention_partial`), chunked
+prefill / speculative verify (`paged_chunk_attention`) and the split-page
+Pallas grids — produces locally-normalized partials `(ō, m, ℓ)` over some
+subset of the KV pages.  This module is the single place those partials
+recombine: `merge_partials` tree-merges ANY number of partials along one
+axis with log-sum-exp renormalization.
+
+The reduction is written in its order-free form (one global max, one
+weighted sum) rather than as a fold of two-way merges, so the result is
+invariant under permutation and re-bracketing of the partition axis —
+the property that lets the same core serve a vmapped ref split, a Pallas
+partition grid and the cross-device psum combine interchangeably.
+
+Empty partitions are the identity: a partial holding no valid tokens
+carries `m = NEG_INF` (−1e30, kept finite so `exp` never produces NaN)
+and `ℓ = 0`, giving it zero weight; if EVERY partial is empty the merged
+output is all-zeros with `ℓ = 0`, matching what a single partial over an
+empty page set returns.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def merge_partials(o: jax.Array, m: jax.Array, l: jax.Array,
+                   axis: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge N locally-normalized attention partials stacked on `axis`.
+
+    o: [..., P on axis, ..., dh] partial outputs (each already divided by
+    its own ℓ); m/l: matching stats without the trailing dh dim.  Returns
+    the merged (ō, m, ℓ) with the partition axis reduced away — the same
+    contract a single `paged_attention_partial` call over the union of
+    the partitions' pages would produce.
+    """
+    m = jnp.moveaxis(m, axis, 0)
+    l = jnp.moveaxis(l, axis, 0)
+    o = jnp.moveaxis(o, axis, 0)
+    m_all = jnp.max(m, axis=0)
+    w = l * jnp.exp(m - m_all[None])             # ℓ re-scaled to global max
+    l_all = jnp.sum(w, axis=0)
+    o_all = jnp.sum(o * w[..., None], axis=0) \
+        / jnp.maximum(l_all, 1e-30)[..., None]
+    return o_all, m_all, l_all
+
+
+def resolve_partitions(partitions: int, num_pages: int) -> int:
+    """Resolve a partition request against a concrete page count.
+
+    partitions > 0 is an explicit request and must divide `num_pages`
+    exactly — a non-divisor raises rather than silently rebalancing, so a
+    DSE-chosen split can't quietly degrade.  partitions == 0 means auto:
+    contexts short enough that the page walk fits cache stay sequential,
+    long walks split 16 ways (halved down to the nearest divisor), which
+    is where the split-page walk pays for its merge (see DESIGN.md §12).
+    """
+    if num_pages <= 0:
+        raise ValueError(f"num_pages must be positive, got {num_pages}")
+    if partitions < 0:
+        raise ValueError(f"partitions must be >= 0, got {partitions}")
+    if partitions:
+        if num_pages % partitions:
+            raise ValueError(
+                f"partitions={partitions} does not divide the page count "
+                f"{num_pages}; pick a divisor (or 0 for auto)")
+        return partitions
+    p = 1 if num_pages < 256 else 16
+    while p > 1 and num_pages % p:
+        p //= 2
+    return p

@@ -35,6 +35,33 @@ def test_recommend_engine_config():
     assert eng_short.variant in ("compact", "discrete")
 
 
+def test_recommend_attn_partitions_by_context():
+    """Split-page attention is a long-context knob: the softmax stream
+    only has something to hide under when the KV walk dominates, so the
+    DSE keeps partitions = 1 at short context and splits at 100K."""
+    eng_long = dse.recommend_engine_config("llama3.1-70b", 100_000)
+    eng_short = dse.recommend_engine_config("llama3.1-70b", 1_000)
+    assert eng_long.attn_partitions > 1
+    assert eng_short.attn_partitions == 1
+    # the recommended count comes from the swept ladder
+    assert eng_long.attn_partitions in dse.ATTN_PARTITIONS
+
+
+def test_attn_partitions_latency_monotone_gain():
+    """partitions > 1 never makes the model slower at long context and
+    the gain itself grows with context (more walk to hide under)."""
+    from repro.core import flashsim as fs
+    cfg = get_config("llama3.1-70b")
+    sys = fs.kvnand_d(8, 8, 4, 16, kv_bits=8)
+    gains = []
+    for seq in (16_000, 50_000, 100_000):
+        base = fs.decode_token_latency(sys, cfg, seq).total
+        split = fs.decode_token_latency(sys, cfg, seq, partitions=16).total
+        gains.append(base / split)
+    assert all(g >= 1.0 for g in gains)
+    assert gains == sorted(gains)
+
+
 def test_best_config_prefers_bigger_g2_at_longer_ctx():
     cfg = get_config("llama3.1-70b")
     b_short = dse.best_discrete(cfg, 1_000, 8, 4, 16)

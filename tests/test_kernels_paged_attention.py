@@ -1,12 +1,15 @@
 """Paged decode attention: ref + Pallas-interpret vs dense oracle, sweeping
-page geometry, GQA widths, windows, ragged lengths, dtypes."""
+page geometry, GQA widths, windows, ragged lengths, dtypes — and the
+split-page `partitions` axis against the monolithic walk."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.quant import quantize_kv_page
 from repro.kernels.flash_attention import dense_attention_ref
-from repro.kernels.paged_attention import paged_attention_partial
+from repro.kernels.paged_attention import (paged_attention_partial,
+                                           paged_chunk_attention)
 
 SWEEP = [
     # B, K, G, NP, T, dh, lengths, window, dtype
@@ -53,6 +56,136 @@ def test_vs_dense(case, impl):
             causal=True, window=window, q_offset=L - 1)
         np.testing.assert_allclose(np.asarray(o[b], np.float32),
                                    np.asarray(ref[0, 0]), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# split-page `partitions` parity: every entry point, every pool format,
+# every layout, partitions in {1, 4, NP} — identical math to the
+# monolithic walk (partitions resolve through the same merge core the
+# cross-device combine uses).
+
+def _quantize(kp, vp, fmt):
+    if fmt == "none":
+        return kp, vp, None, None
+    kq, ks = quantize_kv_page(kp, fmt)
+    vq, vs = quantize_kv_page(vp, fmt)
+    return kq, vq, ks, vs
+
+
+def _shared_pool(kp, vp, ks, vs, seed=3):
+    """Scatter a striped [B,K,NP,...] pool into a shared [K,P_total,...]
+    pool behind a random per-slot page table."""
+    B, K, NP = kp.shape[:3]
+    Pt = B * NP + 4
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.permutation(Pt)[:B * NP].reshape(B, NP),
+                        jnp.int32)
+    def scatter(pages):
+        pool = jnp.zeros((K, Pt) + pages.shape[3:], pages.dtype)
+        for b in range(B):
+            pool = pool.at[:, table[b]].set(pages[b])
+        return pool
+    kpool, vpool = scatter(kp), scatter(vp)
+    kspool = None if ks is None else scatter(ks)
+    vspool = None if vs is None else scatter(vs)
+    return kpool, vpool, kspool, vspool, table
+
+
+PARITY_FMTS = ["none", "kv8", "kv4"]
+
+
+@pytest.mark.parametrize("fmt", PARITY_FMTS)
+@pytest.mark.parametrize("layout", ["striped", "shared"])
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_decode_partitions_parity(fmt, layout, impl):
+    B, K, G, NP, T, dh = 2, 2, 4, 16, 8, 32
+    H = K * G
+    window = 40 if fmt == "none" else None
+    _, _, kp, vp, base = _build(B, K, NP, T, dh, jnp.float32)
+    kp, vp, ks, vs = _quantize(kp, vp, fmt)
+    table = None
+    if layout == "shared":
+        kp, vp, ks, vs, table = _shared_pool(kp, vp, ks, vs)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, H, dh))
+    length = jnp.asarray([NP * T - 3, NP * T // 2 + 1], jnp.int32)
+    kw = dict(window=window, impl=impl, kv_quant=fmt,
+              k_scale=ks, v_scale=vs, page_table=table)
+    ref = paged_attention_partial(q, kp, vp, base, length,
+                                  partitions=1, **kw)
+    for P in (4, NP):
+        got = paged_attention_partial(q, kp, vp, base, length,
+                                      partitions=P, **kw)
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("fmt", PARITY_FMTS)
+@pytest.mark.parametrize("layout", ["striped", "shared"])
+@pytest.mark.parametrize("mode", ["chunk", "verify", "one_shot"])
+def test_chunk_partitions_parity(fmt, layout, mode):
+    """The three multi-token shapes: chunked prefill (scalar start),
+    speculative verify (per-row start, per-row q_pos) and one-shot
+    prefill from position 0."""
+    B, K, G, NP, T, dh, S = 2, 2, 2, 8, 8, 16, 4
+    H = K * G
+    _, _, kp, vp, base = _build(B, K, NP, T, dh, jnp.float32)
+    kp, vp, ks, vs = _quantize(kp, vp, fmt)
+    table = None
+    if layout == "shared":
+        kp, vp, ks, vs, table = _shared_pool(kp, vp, ks, vs)
+    q = jax.random.normal(jax.random.PRNGKey(11), (B, S, H, dh))
+    if mode == "chunk":
+        start = jnp.int32(NP * T // 2)
+        q_pos = start + jnp.arange(S)
+    elif mode == "verify":
+        start = jnp.asarray([NP * T - S - 1, NP * T // 3], jnp.int32)
+        q_pos = start[:, None] + jnp.arange(S)[None, :]
+    else:
+        start = jnp.int32(0)
+        q_pos = jnp.arange(S)
+    kw = dict(window=None, kv_quant=fmt, k_scale=ks, v_scale=vs,
+              page_table=table)
+    ref = paged_chunk_attention(q, kp, vp, base, start, q_pos,
+                                partitions=1, **kw)
+    for P in (4, NP):
+        got = paged_chunk_attention(q, kp, vp, base, start, q_pos,
+                                    partitions=P, **kw)
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=5e-4, rtol=5e-4)
+
+
+def test_unknown_impl_raises():
+    B, K, G, NP, T, dh = 1, 2, 2, 4, 8, 16
+    _, _, kp, vp, base = _build(B, K, NP, T, dh, jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, K * G, dh))
+    length = jnp.asarray([20], jnp.int32)
+    with pytest.raises(ValueError, match="unknown attention impl"):
+        paged_attention_partial(q, kp, vp, base, length, impl="oracle")
+    with pytest.raises(ValueError, match="unknown attention impl"):
+        paged_chunk_attention(q[:, None], kp, vp, base, jnp.int32(0),
+                              jnp.arange(1), impl="chunked")
+
+
+def test_pages_per_block_degradation_is_loud():
+    """A blocking request the page count cannot honor raises instead of
+    silently serializing page-at-a-time; explicit ppb=1 still works."""
+    B, K, G, NP, T, dh = 1, 2, 2, 7, 8, 16   # 7 pages: no even divisor
+    _, _, kp, vp, base = _build(B, K, NP, T, dh, jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, K * G, dh))
+    length = jnp.asarray([50], jnp.int32)
+    with pytest.raises(ValueError, match="pages_per_block"):
+        paged_attention_partial(q, kp, vp, base, length, impl="interpret",
+                                pages_per_block=4)
+    o, m, l = paged_attention_partial(q, kp, vp, base, length,
+                                      impl="interpret", pages_per_block=1)
+    o_ref, m_ref, l_ref = paged_attention_partial(q, kp, vp, base, length,
+                                                  impl="ref")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_partial_stats_merge():
