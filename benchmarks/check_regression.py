@@ -47,9 +47,11 @@ SERVING_PATH = REPO_ROOT / "BENCH_serving.json"
 SERVING_GATED_SUFFIXES = ("/wall", "/steps_to_drain",
                           "/ttft_p50", "/tpot_p50")
 # informational prefixes: serving/spec/* rows (speculative decoding)
-# stay ungated while the feature's trajectory accumulates — the bench
-# itself hard-fails on output divergence or accepted_per_step <= 1
-SERVING_UNGATED_PREFIXES = ("serving/spec/",)
+# and serving/tiered/* rows (tiered flash KV hierarchy, DESIGN.md §13)
+# stay ungated while each feature's trajectory accumulates — the bench
+# itself hard-fails on output divergence, accepted_per_step <= 1, a
+# hot tier that never misses, or prefetch failing to beat the ablation
+SERVING_UNGATED_PREFIXES = ("serving/spec/", "serving/tiered/")
 # same mechanism for kernel rows: the 100K split-page partition sweep
 # stays informational while its trajectory accumulates (the landing run
 # has no committed baseline); the correctness of the split is gated by

@@ -37,11 +37,28 @@ verify path and cross-checked token-identical against sequential decode:
   serving/spec/wall                   end-to-end µs for the spec drain
   serving/spec/seq_wall               the same trace decoded sequentially
 
+Tiered flash KV hierarchy (DESIGN.md §13) gets a two-wave trace whose
+working set exceeds the hot tier (wave 2 re-admits wave 1's prompts
+after their cache pages were demoted to the capacity store), drained
+with prefetch on and off and cross-checked token-identical against the
+single-tier pool:
+
+  serving/tiered/wall                 end-to-end µs (prefetch on)
+  serving/tiered/hit_rate             cached map-ins served hot (< 100%
+        by construction — the first re-admission wave demand-faults)
+  serving/tiered/stall_tokens         demand promotions with prefetch ON
+        (must beat stall_tokens_noprefetch; derived column carries the
+        flashsim-modeled stall seconds)
+  serving/tiered/stall_tokens_noprefetch   the ablation
+  serving/tiered/pool_util_hot        peak hot-resident / hot slots
+  serving/tiered/pool_util_capacity   peak live flash pages / flash pool
+
 `wall`, `steps_to_drain`, and the ttft/tpot p50 rows are gated by
 check_regression.py (p95 rows are informational — compile-dominated;
-the serving/spec/* rows are informational too while the feature lands);
-counter rows carry the count in `us_per_call` (the harness's one
-numeric column) with the unit spelled out in `derived`.
+the serving/spec/* and serving/tiered/* rows ride the ungated-prefix
+mechanism while those features land); counter rows carry the count in
+`us_per_call` (the harness's one numeric column) with the unit spelled
+out in `derived`.
 """
 import time
 
@@ -78,6 +95,49 @@ def _spec_trace(vocab):
     drafting has something to hit."""
     rng = np.random.default_rng(17)
     return [(rng.integers(1, vocab, 6).tolist() * 5) for _ in range(4)]
+
+
+N_TIER_UNIQ = 10
+TIER_TOTAL_PAGES = 96
+TIER_HOT_PAGES = 12
+
+
+def _tier_trace(vocab):
+    """Shared 32-token system prompt + 10 unique 9-token tails.  Ten
+    41-token prompts page out to far more flash pages than the 12-slot
+    hot tier holds, so draining them twice forces wave 1's prefix-cache
+    pages through demotion and back."""
+    rng = np.random.default_rng(23)
+    sysp = rng.integers(1, vocab, 32).tolist()
+    return [sysp + rng.integers(1, vocab, 9).tolist()
+            for _ in range(N_TIER_UNIQ)]
+
+
+def _drain_tiered(cfg, params, eng, uniq, *, prefetch=True):
+    """Two-wave drain on ONE server: wave 1 admits the uniques, wave 2
+    re-submits the same prompts after their pages were demoted.  The
+    first re-admissions demand-fault in both modes (no queue to peek
+    before they map), the staggered rest give prefetch its window."""
+    from repro.serving.api import (KVNANDServer, SamplingParams,
+                                   ServerConfig)
+
+    server = KVNANDServer(
+        ServerConfig(scheduler="interleaved", engine=eng,
+                     batch_slots=SLOTS, max_context=64,
+                     prefill_chunk_tokens=PAGE_TOKENS,
+                     tier_prefetch=prefetch),
+        cfg=cfg, params=params)
+    sp = SamplingParams(max_new_tokens=MAX_NEW)
+    outs = {}
+    t0 = time.perf_counter()
+    for wave in range(2):
+        uids = [server.submit(p, sp) for p in uniq]
+        server.run()
+        for u in uids:
+            outs[(wave, u)] = server.output(u).token_ids
+            server.release(u)
+    dt = time.perf_counter() - t0
+    return dt, outs, server.stats
 
 
 def _drain(scheduler, cfg, params, eng, prompts, *, slots=SLOTS,
@@ -208,6 +268,66 @@ def run():
          f"{st['spec_steps']} row-steps)")
     emit("serving/spec/wall", dt * 1e6,
          f"{total / dt:.1f} tok/s cpu ({total} tokens, spec_k=4)")
+
+    # tiered flash KV hierarchy (DESIGN.md §13): two-wave trace whose
+    # working set (96 flash pages) exceeds the 12-slot hot tier; outputs
+    # must stay token-identical to the single-tier pool, the hot tier
+    # must actually miss (< 100% hit rate), and prefetch must absorb
+    # demand faults relative to the ablation
+    tier_uniq = _tier_trace(cfg.vocab_size)
+    flat_eng = EngineConfig(page_tokens=PAGE_TOKENS,
+                            uniform_lengths=False, shared_pool=True,
+                            total_pages=TIER_TOTAL_PAGES)
+    tier_eng = EngineConfig(page_tokens=PAGE_TOKENS,
+                            uniform_lengths=False, shared_pool=True,
+                            total_pages=TIER_TOTAL_PAGES,
+                            hot_pages=TIER_HOT_PAGES)
+    _, o_flat, _ = _drain_tiered(cfg, params, flat_eng, tier_uniq)
+    dt_off, o_off, st_off = _drain_tiered(cfg, params, tier_eng,
+                                          tier_uniq, prefetch=False)
+    dt_on, o_on, st_on = _drain_tiered(cfg, params, tier_eng, tier_uniq)
+    for name, o in (("prefetch-on", o_on), ("prefetch-off", o_off)):
+        if o != o_flat:
+            raise AssertionError(
+                f"tiered {name} outputs diverged from the single-tier "
+                "pool")
+    touched = st_on["tier_hit_pages"] + st_on["tier_miss_pages"]
+    tier_hr = st_on["tier_hit_pages"] / max(touched, 1)
+    if tier_hr >= 1.0:
+        raise AssertionError(
+            "tiered trace never missed the hot tier — working set does "
+            "not exceed it")
+    if st_on["tier_stall_tokens"] >= st_off["tier_stall_tokens"]:
+        raise AssertionError(
+            f"prefetch did not reduce demand faults "
+            f"({st_on['tier_stall_tokens']} on vs "
+            f"{st_off['tier_stall_tokens']} off)")
+    from repro.core import flashsim as fs
+    sysm = fs.kvnand_d(8, 8, 4, 16, kv_bits=8)
+    stall_s = fs.tier_stall_time(sysm, get_config(ARCH),
+                                 st_on["tier_stall_tokens"],
+                                 PAGE_TOKENS)
+    emit("serving/tiered/wall", dt_on * 1e6,
+         f"us two-wave drain, prefetch on ({dt_off * 1e6:.0f} off)")
+    emit("serving/tiered/hit_rate", tier_hr * 100.0,
+         f"% cached map-ins hot ({st_on['tier_hit_pages']}/{touched}; "
+         f"{st_on['tier_prefetch_pages']} prefetched)")
+    emit("serving/tiered/stall_tokens",
+         float(st_on["tier_stall_tokens"]),
+         f"demand promotions, prefetch on; modeled stall "
+         f"{stall_s * 1e6:.0f} us on kvnand-d")
+    emit("serving/tiered/stall_tokens_noprefetch",
+         float(st_off["tier_stall_tokens"]),
+         f"demand promotions with prefetch disabled "
+         f"({st_off['tier_demotes']} demotes)")
+    emit("serving/tiered/pool_util_hot",
+         st_on["tier_peak_hot"] / st_on["tier_hot_slots"] * 100.0,
+         f"% peak: {st_on['tier_peak_hot']} of "
+         f"{st_on['tier_hot_slots']} hot slots resident")
+    emit("serving/tiered/pool_util_capacity",
+         st_on["pool_peak_pages"] / st_on["pool_total_pages"] * 100.0,
+         f"% peak: {st_on['pool_peak_pages']} of "
+         f"{st_on['pool_total_pages']} flash pages live")
 
 
 if __name__ == "__main__":

@@ -8,9 +8,10 @@ Two checks, both cheap and deterministic:
      The README's architecture map is only useful while its file
      pointers stay alive; this fails the build when a refactor moves one.
 
-  2. QUICKSTART SMOKE — the first ```python fence in README.md is
+  2. QUICKSTART SMOKE — EVERY ```python fence in README.md is
      extracted verbatim and executed with PYTHONPATH=src.  The front
-     door snippet must keep working, not rot.
+     door snippets (single-tier quickstart, tiered-pool quickstart)
+     must keep working, not rot.
 
 Run locally:  python docs/check_docs.py   (from the repo root)
 """
@@ -51,19 +52,22 @@ def check_links() -> list:
 
 def run_quickstart() -> int:
     readme = (REPO / "README.md").read_text()
-    m = _FENCE.search(readme)
-    if not m:
+    fences = _FENCE.findall(readme)
+    if not fences:
         print("[check_docs] no ```python fence in README.md")
         return 1
-    with tempfile.NamedTemporaryFile("w", suffix=".py",
-                                     delete=False) as f:
-        f.write(m.group(1))
-        snippet = f.name
     env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
-    print("[check_docs] running README quickstart snippet ...")
-    proc = subprocess.run([sys.executable, snippet], env=env,
-                          cwd=str(REPO))
-    return proc.returncode
+    for i, body in enumerate(fences, 1):
+        with tempfile.NamedTemporaryFile("w", suffix=".py",
+                                         delete=False) as f:
+            f.write(body)
+            snippet = f.name
+        print(f"[check_docs] running README snippet {i}/{len(fences)} ...")
+        proc = subprocess.run([sys.executable, snippet], env=env,
+                              cwd=str(REPO))
+        if proc.returncode:
+            return proc.returncode
+    return 0
 
 
 def main() -> int:

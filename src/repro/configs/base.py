@@ -239,6 +239,13 @@ class EngineConfig:
     shared_pool: bool = False
     total_pages: int = 0            # global-pool physical pages (0 -> B·NPg)
     total_pages_w: int = 0          # window-pool physical pages (0 -> B·NPw)
+    # tiered flash KV hierarchy (DESIGN.md §13): keep only `hot_pages`
+    # of the shared global pool device-resident (the HOT tier); the
+    # remaining `total_pages - hot_pages` flash pages form the CAPACITY
+    # tier, staged in/out by the scheduler's promote/demote machinery.
+    # 0 = single tier (the whole pool is hot).  DSE-selectable via
+    # `core.dse.recommend_hot_pages`.
+    hot_pages: int = 0
     uniform_lengths: bool = True    # static batching: lockstep appends
     # draft-and-verify speculative decoding: tokens drafted per decode
     # step (prompt lookup) and verified in one pass; 0 = sequential.
@@ -270,6 +277,16 @@ class EngineConfig:
         if self.attn_partitions < 0:
             raise ValueError(f"attn_partitions must be >= 0 (0 = auto), "
                              f"got {self.attn_partitions}")
+        if self.hot_pages < 0:
+            raise ValueError(f"hot_pages must be >= 0 (0 = single tier), "
+                             f"got {self.hot_pages}")
+        if self.hot_pages and not self.shared_pool:
+            raise ValueError("hot_pages tiers the SHARED page pool: set "
+                             "shared_pool=True (DESIGN.md §13)")
+        if self.hot_pages and self.total_pages \
+                and self.hot_pages > self.total_pages:
+            raise ValueError(f"hot_pages ({self.hot_pages}) cannot exceed "
+                             f"total_pages ({self.total_pages})")
 
 
 # ---------------------------------------------------------------------------

@@ -172,6 +172,26 @@ def recommend_attn_partitions(sys: fs.SystemConfig, cfg: ModelConfig,
     return best_p if base / max(best_lat, 1e-30) >= min_speedup else 1
 
 
+def recommend_hot_pages(sys: fs.SystemConfig, cfg: ModelConfig, seq: int,
+                        *, slots: int = 1, page_tokens: int = 64,
+                        total_pages: int = 0) -> int:
+    """Pick `EngineConfig.hot_pages` for a tiered shared pool on `sys`
+    (DESIGN.md §13): the NPU-side SRAM staging buffer sized in KV pages
+    (`flashsim.hot_tier_pages`), floored at the pinned working set of
+    `slots` concurrent seq-length requests — a mapped hot page is never
+    demoted, so admission needs at least that many slots to make
+    progress.  Returns 0 (single tier) when the whole flash pool
+    (`total_pages`, when known) already fits the hot tier: tiering a
+    pool that never demotes buys nothing."""
+    if slots <= 0:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    working_set = slots * -(-seq // page_tokens)
+    hot = max(fs.hot_tier_pages(sys, cfg, page_tokens), working_set)
+    if total_pages and hot >= total_pages:
+        return 0
+    return hot
+
+
 def recommend_engine_config(arch: str, seq: int, *,
                             total_dies: int = 16,
                             allow_kv_quant: bool = True,

@@ -861,6 +861,13 @@ class KVNANDEngine:
                 "sharded one-shot prefill into a shared pool is not wired; "
                 "shared-pool serving prefills via prefill_chunk (the mesh "
                 "path covers decode and chunk attention)")
+        if shared and self.eng.hot_pages:
+            raise ValueError(
+                "one-shot prefill cannot run against a TIERED pool: the "
+                "identity-striped init tables would alias slots inside the "
+                "hot tier's few device pages; tiered pools are managed by "
+                "the serving scheduler's residency machinery (DESIGN.md "
+                "§13) — run hot_pages=0 here, or serve via KVNANDServer")
         # prefill writes through the (identity-striped) tables; they are
         # read-only during the layer scan so they ride as closure constants
         self._prefill_tables = {"g": cache.page_table_g,

@@ -440,6 +440,56 @@ def pooled_capacity(sys: SystemConfig, cfg: ModelConfig, seq: int,
 
 
 # ---------------------------------------------------------------------------
+# Tiered KV hierarchy (DESIGN.md §13): hot-tier staging cost model
+# ---------------------------------------------------------------------------
+# The serving scheduler's tiered pool keeps `EngineConfig.hot_pages`
+# pages staged NPU-side (the SoC SRAM KV buffer of Table I) and leaves
+# the rest flash-resident.  These helpers price the tier boundary: what
+# one page promotion costs (a flash page-granular read plus the KV bytes
+# over the external interface), how many pages the staging buffer holds,
+# and the total stall a drain's demand faults charge.  PREFETCHED
+# promotions are issued at the end of a step and overlap the next step's
+# compute, so only DEMAND faults (`tier_stall_tokens`) are charged.
+
+def kv_page_bytes(cfg: ModelConfig, kv_bits: int,
+                  page_tokens: int = 64) -> float:
+    """Bytes of one KV page (all layers, K+V) at the stored precision."""
+    return kv_bytes_per_token(cfg, kv_bits) * page_tokens
+
+
+def page_promote_time(sys: SystemConfig, cfg: ModelConfig,
+                      page_tokens: int = 64) -> float:
+    """Seconds to stage ONE capacity-tier page into the hot tier: a
+    page-granular flash read (tR) plus the page's KV bytes over the KV
+    medium's external interface, striped over its dies."""
+    b = kv_page_bytes(cfg, sys.kv_bits_eff, page_tokens)
+    if sys.kind == "base1":
+        return b / sys.dram.bw
+    n = sys.kv_dies if sys.kind != "kvnand-c" else sys.weight_dies
+    return sys.die.tR + b / (n * sys.die.ext_bw)
+
+
+def hot_tier_pages(sys: SystemConfig, cfg: ModelConfig,
+                   page_tokens: int = 64) -> int:
+    """Pages of KV the NPU-side SRAM staging buffer holds — the natural
+    hot-tier size for this (system, model) pair; 0 when even one page
+    overflows the buffer (tiering then needs a device-DRAM-class hot
+    tier, which the DRAM-free configs do not have)."""
+    b = kv_page_bytes(cfg, sys.kv_bits_eff, page_tokens)
+    if b <= 0:
+        return 10 ** 9        # attention-free: everything is "hot"
+    return int(sys.npu.sram_kv_buffer // b)
+
+
+def tier_stall_time(sys: SystemConfig, cfg: ModelConfig,
+                    demand_faults: int, page_tokens: int = 64) -> float:
+    """Modeled wall-clock charged to DEMAND promotions over a drain
+    (`stats["tier_stall_tokens"]` × the per-page staging cost);
+    prefetched pages are free — their reads hid under compute."""
+    return demand_faults * page_promote_time(sys, cfg, page_tokens)
+
+
+# ---------------------------------------------------------------------------
 # Energy model (per decoded token, J)
 # ---------------------------------------------------------------------------
 

@@ -160,7 +160,11 @@ def cache_spec(cfg: ModelConfig, eng: EngineConfig, batch: int,
             NPg = eng.max_pages_per_seq or ceil_div(max_context, T)
             NPg = round_np(NPg, page_shards_g)
             if eng.shared_pool:
-                Pg = round_np(eng.total_pages or batch * NPg, page_shards_g)
+                # tiered hierarchy (DESIGN.md §13): only the HOT tier is
+                # device-resident — the flash-total page count lives in
+                # the allocator, not in this pool.
+                Pg_flash = eng.total_pages or batch * NPg
+                Pg = round_np(eng.hot_pages or Pg_flash, page_shards_g)
                 spec["k_pages_g"] = ((Lg, K, Pg, Ts, dh), pool_dt)
                 spec["v_pages_g"] = ((Lg, K, Pg, Ts, dh), pool_dt)
                 if fmt != "none":

@@ -49,6 +49,17 @@ def serve(argv=None):
     ap.add_argument("--total-pages", type=int, default=0,
                     help="shared-pool size in pages (0: slots × pages "
                     "per max_context — byte parity with the stripes)")
+    ap.add_argument("--hot-pages", type=int, default=0,
+                    help="tiered flash KV hierarchy (DESIGN.md §13): "
+                    "keep only this many pages device-resident (the hot "
+                    "tier) and stage the rest from the capacity tier; "
+                    "0 = single tier.  Requires --shared-pool; "
+                    "repro.core.dse.recommend_hot_pages derives a value "
+                    "from the flash model")
+    ap.add_argument("--no-tier-prefetch", action="store_true",
+                    help="disable the queue-ahead hot-tier prefetch "
+                    "stage (every capacity-tier map-in demand-faults — "
+                    "the ablation serving_bench measures)")
     ap.add_argument("--speculation-k", type=int, default=None,
                     help="draft tokens verified per decode step "
                     "(prompt-lookup self-drafting, DESIGN.md §11); "
@@ -57,7 +68,8 @@ def serve(argv=None):
     args = ap.parse_args(argv)
 
     pool_kw = dict(shared_pool=args.shared_pool,
-                   total_pages=args.total_pages)
+                   total_pages=args.total_pages,
+                   hot_pages=args.hot_pages)
     if args.use_dse:
         eng = recommend_engine_config(args.arch, args.max_context)
         eng = EngineConfig(**{**eng.__dict__, "page_tokens": 16,
@@ -76,7 +88,8 @@ def serve(argv=None):
         scheduler=args.scheduler, batch_slots=args.slots,
         max_context=args.max_context,
         prefill_chunk_tokens=args.chunk_tokens,
-        speculation_k=args.speculation_k))
+        speculation_k=args.speculation_k,
+        tier_prefetch=not args.no_tier_prefetch))
     cfg = server.cfg
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
@@ -116,6 +129,15 @@ def serve(argv=None):
               f"{st['pool_total_pages']} pages live, "
               f"{hit_rate:.0%} prompt pages from prefix cache, "
               f"{st['cow_copies']} COW copies")
+    if st["tier_hot_slots"]:
+        touched = st["tier_hit_pages"] + st["tier_miss_pages"]
+        tier_hr = st["tier_hit_pages"] / max(touched, 1)
+        print(f"[serve] tiered pool: {st['tier_hot_slots']} hot slots "
+              f"(peak {st['tier_peak_hot']} resident), "
+              f"{tier_hr:.0%} cached map-ins hot, "
+              f"{st['tier_stall_tokens']} stall tokens, "
+              f"{st['tier_promotes']} promotes / {st['tier_demotes']} "
+              f"demotes ({st['tier_prefetch_pages']} prefetched)")
     for o in outs[:3]:
         print(f"  req {o.uid}: {len(o.token_ids)} tokens "
               f"({o.finish_reason}) -> {o.token_ids[:8]}...")

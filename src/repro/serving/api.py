@@ -94,6 +94,12 @@ class ServerConfig:
     seed: int = 0                   # params init + default request streams
     max_steps: int = 100_000        # drain guard for generate()/run()
     speculation_k: Optional[int] = None     # None -> engine.speculation_k
+    # tiered pool (EngineConfig.hot_pages > 0, DESIGN.md §13): promote
+    # the next admission's prefix-hit pages at the end of each step so
+    # the admission pins warm pages instead of demand-faulting; off =
+    # every capacity-tier map-in stalls (the ablation serving_bench
+    # measures).  Ignored by single-tier pools.
+    tier_prefetch: bool = True
 
     def __post_init__(self):
         if self.scheduler not in _SCHEDULERS:
@@ -123,7 +129,13 @@ class RequestOutput:
     """A finished request, with timing counters for serving metrics and
     — when the server ran speculative decoding — per-request acceptance
     stats (`spec_steps` verify steps, `spec_drafted` offered drafts,
-    `spec_accepted` accepted drafts; all 0 under sequential decode)."""
+    `spec_accepted` accepted drafts; all 0 under sequential decode).
+
+    Under a TIERED pool (DESIGN.md §13), `tier_hit_pages` counts cached
+    pages this request mapped while they were hot-resident and
+    `tier_stall_tokens` the pages it had to demand-promote from the
+    capacity tier at admission (its share of the fleet's stall tokens);
+    both stay 0 for single-tier pools and cache-miss prompts."""
     uid: int
     prompt: List[int]
     token_ids: List[int]
@@ -135,6 +147,8 @@ class RequestOutput:
     spec_steps: int = 0
     spec_drafted: int = 0
     spec_accepted: int = 0
+    tier_hit_pages: int = 0
+    tier_stall_tokens: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -190,7 +204,7 @@ class KVNANDServer:
             seed=config.seed,
             prefill_chunk_tokens=config.prefill_chunk_tokens,
             step_token_budget=config.step_token_budget,
-            speculation_k=spec_k)
+            speculation_k=spec_k, tier_prefetch=config.tier_prefetch)
         self._requests: Dict[int, Request] = {}
         self._streamed: Dict[int, int] = {}
         self._done_emitted: set = set()
@@ -324,7 +338,9 @@ class KVNANDServer:
             finish_reason=req.finish_reason, submit_time=req.submit_ts,
             first_token_time=req.first_ts, finish_time=req.finish_ts,
             spec_steps=req.spec_steps, spec_drafted=req.spec_drafted,
-            spec_accepted=req.spec_accepted)
+            spec_accepted=req.spec_accepted,
+            tier_hit_pages=req.tier_hits,
+            tier_stall_tokens=req.tier_stalls)
 
     def outputs(self) -> List[RequestOutput]:
         """Every finished, unreleased request, in uid order."""

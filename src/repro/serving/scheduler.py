@@ -57,6 +57,16 @@ layer-group and moves allocation policy to this host scheduler:
     free list; pages referenced by the prefix cache survive until LRU
     eviction reclaims them under pressure.
 
+Tiered mode (``EngineConfig.hot_pages``, DESIGN.md §13) splits that pool
+into a device-resident HOT tier and a flash-resident CAPACITY tier: the
+allocator keeps stable flash page ids, a `HotTier` maps resident ids to
+hot slots (the values the page tables actually carry), demoted pages
+park their bytes in a host-side store, and a queue-ahead prefetch stage
+promotes the next admission's prefix-hit pages at the end of each step
+so admissions pin warm pages instead of demand-faulting (faults =
+`tier_stall_tokens`).  Pages mapped by a live slot are pinned hot and
+never demoted, so decode/chunked-prefill/verify walks cannot fault.
+
 `SpliceBatcher` keeps the old admit-time full prefill + jit'd slot splice
 as the measured baseline (benchmarks/serving_bench.py) and for parity
 tests; the interleaved step never touches the splice path.  The splice
@@ -79,8 +89,8 @@ import numpy as np
 from repro.configs.base import EngineConfig, ModelConfig
 from repro.core import paged_kv
 from repro.core.engine import KVNANDEngine
-from repro.core.page_alloc import (CacheHit, OutOfPages, PageAllocator,
-                                   PrefixCache)
+from repro.core.page_alloc import (CacheHit, HotTier, OutOfHotSlots,
+                                   OutOfPages, PageAllocator, PrefixCache)
 from repro.models.transformer import Runtime
 from repro.serving.draft import propose_draft
 from repro.serving.sampler import (SamplingParams, request_keys,
@@ -122,6 +132,8 @@ class Request:
     spec_steps: int = 0       # verify steps this request decoded in
     spec_drafted: int = 0     # draft tokens offered for verification
     spec_accepted: int = 0    # draft tokens accepted
+    tier_hits: int = 0        # cached pages mapped while hot-resident
+    tier_stalls: int = 0      # cached pages demand-promoted from capacity
 
 
 def bucket_length(n: int, lo: int = MIN_PROMPT_BUCKET,
@@ -154,7 +166,7 @@ class ContinuousBatcher:
                  seed: int = 0, bucket_prompts: bool = True,
                  prefill_chunk_tokens: int = 64,
                  step_token_budget: Optional[int] = None,
-                 speculation_k: int = 0):
+                 speculation_k: int = 0, tier_prefetch: bool = True):
         eng = eng or EngineConfig(page_tokens=16, uniform_lengths=False)
         if eng.uniform_lengths:
             raise ValueError(
@@ -195,6 +207,11 @@ class ContinuousBatcher:
         self.alloc: Optional[PageAllocator] = None
         self.alloc_w: Optional[PageAllocator] = None
         self.prefix_cache: Optional[PrefixCache] = None
+        # tiered flash KV hierarchy (DESIGN.md §13): hot-tier residency
+        # map + host-side capacity store, built by _init_shared_pool
+        # when EngineConfig.hot_pages > 0
+        self.tier: Optional[HotTier] = None
+        self.tier_prefetch = tier_prefetch
         # per-slot sampling params, consumed as TRACED arrays inside the
         # jitted decode step: any mix of per-request temperatures / top-k /
         # top-p / seeds shares the one compiled signature
@@ -258,7 +275,11 @@ class ContinuousBatcher:
                       "prompt_pages": 0, "cow_copies": 0,
                       "pool_peak_pages": 0, "pool_total_pages": 0,
                       "spec_steps": 0, "spec_drafted": 0,
-                      "spec_accepted": 0}
+                      "spec_accepted": 0,
+                      "tier_hot_slots": 0, "tier_hit_pages": 0,
+                      "tier_miss_pages": 0, "tier_stall_tokens": 0,
+                      "tier_promotes": 0, "tier_demotes": 0,
+                      "tier_prefetch_pages": 0, "tier_peak_hot": 0}
         self._compile_keys = set()
         if self.shared:
             self._init_shared_pool(eng)
@@ -269,7 +290,34 @@ class ContinuousBatcher:
         c = self.cache
         if c.k_pages_g is not None:
             self._NPg = c.page_table_g.shape[1]
-            self.alloc = PageAllocator(c.k_pages_g.shape[2])
+            H = c.k_pages_g.shape[2]        # device-resident pages
+            if eng.hot_pages > 0:
+                # tiered hierarchy (DESIGN.md §13): the allocator spans
+                # the FLASH page space (stable ids for tables/caches);
+                # only H of those pages are device-resident at a time
+                total_flash = eng.total_pages or self.B * self._NPg
+                if H > total_flash:
+                    raise ValueError(
+                        f"hot_pages={eng.hot_pages} (rounded to {H}) "
+                        f"exceeds the flash pool of {total_flash} pages; "
+                        "shrink hot_pages or grow total_pages")
+                if c.k_pages_w is not None:
+                    raise ValueError(
+                        f"{cfg.name}: tiered pools cover the GLOBAL layer "
+                        "group only — window rings recycle their pages in "
+                        "place and never cool down; run local-attention "
+                        "archs with hot_pages=0")
+                self.alloc = PageAllocator(total_flash)
+                self.tier = HotTier(H, total_flash)
+                # capacity tier: demoted pages' bytes, flash id -> one
+                # host array per pool leaf
+                self._store: Dict[int, Dict[str, np.ndarray]] = {}
+                self.alloc.add_release_hook(self._tier_release)
+                self._hot_resv = np.zeros(self.B, np.int64)
+                self._hot_out = 0           # sum of per-slot hot footprints
+                self.stats["tier_hot_slots"] = H
+            else:
+                self.alloc = PageAllocator(H)
             self._table_np = np.zeros((self.B, self._NPg), np.int32)
             self.stats["pool_total_pages"] = self.alloc.total
         if c.k_pages_w is not None:
@@ -305,6 +353,92 @@ class ContinuousBatcher:
 
         self._cow_jit = jax.jit(cow_copy, donate_argnums=(0,))
 
+        # tiered staging: one donated dynamic_update_slice per pool leaf
+        # writes a promoted page's bytes into its freshly bound hot slot
+        # (the jax.device_put-style upload of DESIGN.md §13)
+        self._pool_leaves = [n for n in ("k_pages_g", "v_pages_g",
+                                         "k_scale_g", "v_scale_g")
+                             if getattr(c, n) is not None]
+
+        def stage_in(cache, slot, vals):
+            upd = {}
+            for name, val in vals.items():
+                leaf = getattr(cache, name)
+                v = jnp.expand_dims(val, 2).astype(leaf.dtype)
+                start = tuple(slot if d == 2 else 0
+                              for d in range(leaf.ndim))
+                upd[name] = jax.lax.dynamic_update_slice(leaf, v, start)
+            return dataclasses.replace(cache, **upd)
+
+        self._stage_jit = jax.jit(stage_in, donate_argnums=(0,))
+
+    # -- tiered flash KV hierarchy (DESIGN.md §13) ---------------------
+    def _read_hot(self, slot: int) -> Dict[str, np.ndarray]:
+        """Pull one hot slot's bytes to the host (demotion / COW save)."""
+        return {n: np.asarray(getattr(self.cache, n)[:, :, slot])
+                for n in self._pool_leaves}
+
+    def _tier_release(self, page: int):
+        """Allocator release hook: flash page `page` hit refcount 0 on
+        ANY free path (slot teardown, cache eviction, speculative
+        rollback) — retire its hot slot and capacity-store bytes."""
+        self.tier.release(int(page))
+        self._store.pop(int(page), None)
+
+    def _bind_slot(self, page: int, avoid: frozenset = frozenset()) -> int:
+        """Acquire a hot slot for flash page `page`, demoting the LRU
+        unpinned resident to the capacity store when the tier is full
+        (its bytes are read back BEFORE the slot is overwritten)."""
+        slot, victim = self.tier.bind(page, avoid=avoid)
+        if victim is not None:
+            self._store[victim] = self._read_hot(slot)
+            self.stats["tier_demotes"] += 1
+        self.stats["tier_peak_hot"] = max(self.stats["tier_peak_hot"],
+                                          self.tier.resident_count)
+        return slot
+
+    def _promote(self, page: int, avoid: frozenset = frozenset()) -> int:
+        """Stage a capacity-tier page's bytes into a hot slot.  Every
+        live non-resident page has bytes in the store (pages leave
+        residency only by demotion); fresh allocations bind without a
+        copy and never come through here."""
+        slot = self._bind_slot(page, avoid=avoid)
+        vals = self._store.pop(int(page))
+        self._count_compile("tier_stage")
+        self.cache = self._stage_jit(
+            self.cache, jnp.asarray(slot, jnp.int32),
+            {n: jnp.asarray(v) for n, v in vals.items()})
+        self.stats["tier_promotes"] += 1
+        return slot
+
+    def _tier_prefetch_tick(self):
+        """Queue-ahead async prefetch: at the END of a step, promote the
+        capacity-tier pages the next admission's prefix hit will map, so
+        the admission pins already-resident pages instead of demand-
+        faulting.  The staging overlaps the in-flight step's compute
+        (flashsim charges it as hidden — DESIGN.md §13); only demand
+        promotions count as stall tokens.  Uses the side-effect-free
+        cache PEEK and binds around the working set being staged, and
+        backs off when every remaining slot is pinned."""
+        if (self.tier is None or not self.tier_prefetch or not self.queue
+                or self.prefix_cache is None):
+            return
+        hit = self.prefix_cache.lookup(self.queue[0].prompt, record=False)
+        pages = (hit.exact.pages if hit.exact is not None
+                 else hit.full_pages)
+        if not pages:
+            return
+        avoid = frozenset(int(p) for p in pages)
+        for p in pages:
+            if self.tier.is_resident(p):
+                self.tier.touch(p)      # keep warm until admission pins
+            else:
+                try:
+                    self._promote(p, avoid=avoid)
+                except OutOfHotSlots:
+                    break
+                self.stats["tier_prefetch_pages"] += 1
+
     def _push_tables(self):
         """Mirror the host page tables into the device cache leaves (only
         when a mapping actually changed — steady-state decode steps that
@@ -338,12 +472,21 @@ class ContinuousBatcher:
 
     def _ensure_page(self, i: int, lp: int):
         """Slot i is about to WRITE logical page lp: allocate it fresh if
-        unmapped, COW it if currently shared (refcount > 1)."""
+        unmapped, COW it if currently shared (refcount > 1).  Tiered
+        pools additionally pin the page hot — a fresh allocation binds a
+        slot with no byte traffic (its contents are written before the
+        length ever covers them), a COW round-trips the shared bytes
+        through the host so the fresh binding may demote the old page
+        itself when it was the last unpinned resident."""
         pages = self._slot_pages[i]
         if lp not in pages:
             p = self._alloc_g(lp)
             pages[lp] = p
-            self._table_np[i, lp] = p
+            if self.tier is not None:
+                self._table_np[i, lp] = self._bind_slot(p)
+                self.tier.pin(p)
+            else:
+                self._table_np[i, lp] = p
             self._tables_dirty = True
             self._resv[i] -= 1
             self._outstanding -= 1
@@ -353,11 +496,24 @@ class ContinuousBatcher:
             fresh = self.alloc.cow(old)
             if fresh != old:
                 self._count_compile("cow")
-                self.cache = self._cow_jit(self.cache,
-                                           jnp.asarray(old, jnp.int32),
-                                           jnp.asarray(fresh, jnp.int32))
+                if self.tier is not None:
+                    # `old` is pinned (this slot maps it): snapshot its
+                    # bytes, drop this slot's pin, then bind+stage the
+                    # fresh copy — in that order, so the bind may pick
+                    # `old` as its own demotion victim without losing
+                    # the copy source
+                    src = self.tier.slot_of(old)
+                    self._store[fresh] = self._read_hot(src)
+                    self.tier.unpin(old)
+                    self._promote(fresh)
+                    self.tier.pin(fresh)
+                    self._table_np[i, lp] = self.tier.slot_of(fresh)
+                else:
+                    self.cache = self._cow_jit(self.cache,
+                                               jnp.asarray(old, jnp.int32),
+                                               jnp.asarray(fresh, jnp.int32))
+                    self._table_np[i, lp] = fresh
                 pages[lp] = fresh
-                self._table_np[i, lp] = fresh
                 self._tables_dirty = True
                 self.stats["cow_copies"] += 1
                 self._resv[i] -= 1
@@ -370,9 +526,18 @@ class ContinuousBatcher:
         if not self.shared:
             return
         if self.alloc is not None and self._slot_pages[i]:
+            if self.tier is not None:
+                # unpin before the refcount drop: pages the prefix cache
+                # still references stay resident (LRU demotion candidates),
+                # dead pages release their slot via the allocator hook
+                for p in self._slot_pages[i].values():
+                    self.tier.unpin(p)
             self.alloc.free(list(self._slot_pages[i].values()))
         if self.alloc_w is not None and self._slot_ring[i]:
             self.alloc_w.free(self._slot_ring[i])
+        if self.tier is not None:
+            self._hot_out -= int(self._hot_resv[i])
+            self._hot_resv[i] = 0
         self._slot_pages[i] = {}
         self._slot_shared[i] = set()
         self._slot_ring[i] = []
@@ -386,12 +551,30 @@ class ContinuousBatcher:
 
     def _map_cached_pages(self, i: int, pages) -> int:
         """Map cached pages read-only into slot i's logical pages 0..len:
-        one allocator reference each, marked shared (COW before write)."""
+        one allocator reference each, marked shared (COW before write).
+
+        Tiered pools pin each page hot first: a page the prefetcher (or
+        recency) kept resident is a TIER HIT; a page demoted to the
+        capacity store demand-faults — promoted on the spot and counted
+        as a stall token, the observable cost of the DRAM-free story."""
+        req = self.slots[i]
         for j, p in enumerate(pages):
             self.alloc.share([p])
             self._slot_pages[i][j] = p
             self._slot_shared[i].add(j)
-            self._table_np[i, j] = p
+            if self.tier is not None:
+                if self.tier.is_resident(p):
+                    self.stats["tier_hit_pages"] += 1
+                    req.tier_hits += 1
+                else:
+                    self._promote(p)
+                    self.stats["tier_miss_pages"] += 1
+                    self.stats["tier_stall_tokens"] += 1
+                    req.tier_stalls += 1
+                self.tier.pin(p)
+                self._table_np[i, j] = self.tier.slot_of(p)
+            else:
+                self._table_np[i, j] = p
         return len(pages)
 
     def _register_prefix(self, i: int, ps: _PrefillState,
@@ -408,6 +591,15 @@ class ContinuousBatcher:
         pages = [self._slot_pages[i][j] for j in range(n_pages)]
         partial = ps.n % T != 0
         slack = self.alloc.free_count - self._outstanding
+        if self.tier is not None:
+            # hot-tier slack, not whole-pool slack: the repeat that hits
+            # this exact entry must re-pin every page hot AND fund the
+            # partial page's COW with a hot slot — against a cold
+            # capacity tier the flash pool can have plenty of free pages
+            # while the hot tier has none to give, which would publish
+            # an unservable hit
+            slack = min(slack, self.tier.free_slot_count
+                        + self.tier.demotable_count)
         include_exact = (not partial) or slack >= 1
         added = self.prefix_cache.register(
             ps.req.prompt, pages, logits, include_exact=include_exact)
@@ -532,6 +724,13 @@ class ContinuousBatcher:
                     f"pages exceeds the shared pool of "
                     f"{self.alloc.total} pages; shrink the prompt/max_new "
                     "or grow EngineConfig.total_pages")
+            if self.tier is not None and need > self.tier.hot_slots:
+                raise ValueError(
+                    f"request {req.uid}: worst-case footprint of {need} "
+                    f"pages exceeds the hot tier of "
+                    f"{self.tier.hot_slots} pages (mapped pages stay "
+                    "pinned hot); shrink the prompt/max_new or grow "
+                    "EngineConfig.hot_pages")
         self.queue.append(req)
 
     def _admit(self):
@@ -592,6 +791,14 @@ class ContinuousBatcher:
                                     else len(hit.full_pages))
             if resv_needed > avail:
                 return False
+            # tiered pool: the request's worst-case footprint must ALSO
+            # fit the hot tier net of every live slot's reservation —
+            # mapped pages stay pinned for the slot's lifetime, so this
+            # bound guarantees allocations/promotions always find a free
+            # or demotable slot (never OutOfHotSlots mid-flight)
+            if self.tier is not None \
+                    and self._hot_out + need_g > self.tier.hot_slots:
+                return False
         if self.alloc_w is not None and need_w > self.alloc_w.free_count:
             return False
 
@@ -600,6 +807,9 @@ class ContinuousBatcher:
         self._set_slot_params(i, req)
         self.stats["admits"] += 1
         self.stats["prompt_pages"] += -(-n // T)
+        if self.tier is not None:
+            self._hot_resv[i] = need_g
+            self._hot_out += need_g
         # eager window-ring allocation (bounded, recycled in place)
         if self.alloc_w is not None:
             for j in range(need_w):
@@ -693,6 +903,7 @@ class ContinuousBatcher:
         active = [i for i, r in enumerate(self.slots)
                   if r is not None and i not in self._prefill_live]
         decoded = self._decode_batch(active)
+        self._tier_prefetch_tick()
         self.stats["steps"] += 1
         return decoded + chunks_done
 
@@ -759,7 +970,10 @@ class ContinuousBatcher:
             return
         last = (int(self._lengths[i]) - 1) // self.engine.eng.page_tokens
         for lp in [p for p in self._slot_pages[i] if p > last]:
-            self.alloc.free([self._slot_pages[i].pop(lp)])
+            p = self._slot_pages[i].pop(lp)
+            if self.tier is not None:
+                self.tier.unpin(p)      # release hook retires the slot
+            self.alloc.free([p])
             self._slot_shared[i].discard(lp)
             self._resv[i] += 1
             self._outstanding += 1

@@ -84,3 +84,17 @@ def test_gemma3_local_global_pattern():
     cfg = get_config("gemma3-12b")
     flags = [cfg.is_global_layer(i) for i in range(12)]
     assert flags == [False] * 5 + [True] + [False] * 5 + [True]
+
+
+def test_engine_hot_pages_validation():
+    """Tiered-pool knob (DESIGN.md §13): hot_pages needs the shared
+    pool and must fit inside the flash pool."""
+    from repro.configs import EngineConfig
+    eng = EngineConfig(shared_pool=True, total_pages=64, hot_pages=12)
+    assert eng.hot_pages == 12
+    with pytest.raises(ValueError):
+        EngineConfig(hot_pages=8)              # tiering the stripes
+    with pytest.raises(ValueError):
+        EngineConfig(shared_pool=True, total_pages=8, hot_pages=16)
+    with pytest.raises(ValueError):
+        EngineConfig(shared_pool=True, hot_pages=-1)

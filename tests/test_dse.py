@@ -67,3 +67,25 @@ def test_best_config_prefers_bigger_g2_at_longer_ctx():
     b_short = dse.best_discrete(cfg, 1_000, 8, 4, 16)
     b_long = dse.best_discrete(cfg, 100_000, 8, 4, 16)
     assert b_long.g2 > b_short.g2               # paper: 4 dies in G2 @100K
+
+
+def test_recommend_hot_pages():
+    """Tiered hot-tier sizing (DESIGN.md §13): SRAM-derived floor,
+    pinned-working-set floor, and the degenerate single-tier case."""
+    import pytest
+    from repro.core import flashsim as fs
+    cfg = get_config("llama3.1-8b")
+    sys = fs.kvnand_d(8, 8, 4, 16, kv_bits=8)
+    base = fs.hot_tier_pages(sys, cfg, 64)
+    # short context: max(SRAM pages, working set of one 128-tok slot)
+    assert dse.recommend_hot_pages(sys, cfg, 128) == max(base, 2)
+    # long context, many slots: the pinned working set dominates (a
+    # mapped hot page is never demoted, so admission needs the room)
+    hp = dse.recommend_hot_pages(sys, cfg, 100_000, slots=4)
+    assert hp == 4 * -(-100_000 // 64)
+    assert hp > base
+    # hot tier >= whole flash pool: tiering buys nothing -> 0
+    assert dse.recommend_hot_pages(sys, cfg, 128,
+                                   total_pages=max(base, 2)) == 0
+    with pytest.raises(ValueError):
+        dse.recommend_hot_pages(sys, cfg, 128, slots=0)

@@ -130,3 +130,33 @@ def test_energy_improves_with_context():
         ratios.append(e_kv / e_b1)
     assert ratios[0] > ratios[-1]
     assert ratios[-1] < 1.0
+
+
+def test_hot_tier_pages_from_sram_budget():
+    """Hot-tier sizing (DESIGN.md §13): the SRAM staging buffer in KV
+    pages, growing as KV quantization shrinks pages."""
+    cfg = get_config("llama3.1-8b")
+    kv8 = fs.kvnand_d(8, 8, 4, 16, kv_bits=8)
+    b = fs.kv_page_bytes(cfg, 8, 64)
+    assert b == fs.kv_bytes_per_token(cfg, 8) * 64
+    assert fs.hot_tier_pages(kv8, cfg) == int(kv8.npu.sram_kv_buffer // b)
+    kv4 = fs.kvnand_d(8, 8, 4, 16, kv_bits=4)
+    assert fs.hot_tier_pages(kv4, cfg) >= fs.hot_tier_pages(kv8, cfg)
+    # rwkv6's recurrent state is modeled as heavy per-token "KV": one
+    # 64-token page overflows the SRAM buffer -> 0 (no SRAM hot tier)
+    assert fs.hot_tier_pages(kv8, get_config("rwkv6-3b")) == 0
+
+
+def test_page_promote_time_and_stall_model():
+    """A demand promotion pays a page-granular flash read (tR) plus the
+    transfer over the KV medium's external interface; Base-1 stages
+    from DRAM (no tR); stall time is linear in demand faults."""
+    cfg = get_config("llama3.1-8b")
+    sysd = fs.kvnand_d(8, 8, 4, 16, kv_bits=8)
+    t = fs.page_promote_time(sysd, cfg)
+    assert t > sysd.die.tR
+    s1 = fs.base1()
+    assert fs.page_promote_time(s1, cfg) == \
+        fs.kv_page_bytes(cfg, s1.kv_bits_eff) / s1.dram.bw
+    assert fs.tier_stall_time(sysd, cfg, 7) == 7 * t
+    assert fs.tier_stall_time(sysd, cfg, 0) == 0.0

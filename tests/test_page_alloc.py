@@ -14,7 +14,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import paged_kv
-from repro.core.page_alloc import OutOfPages, PageAllocator, PrefixCache
+from repro.core.page_alloc import (HotTier, OutOfHotSlots, OutOfPages,
+                                   PageAllocator, PrefixCache)
 
 
 # ---------------------------------------------------------------------------
@@ -207,6 +208,147 @@ def test_prefix_cache_strict_hit_shorter_than_prompt():
     assert len(hit.full_pages) * T < 10
     hit_exact_len = cache.lookup(list(range(8)))
     assert hit_exact_len.exact is not None  # exact entry handles n == h·T
+
+
+# ---------------------------------------------------------------------------
+# hot tier (tiered flash KV hierarchy, DESIGN.md §13): conservation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(hot=st.integers(1, 8), extra=st.integers(0, 24),
+       seed=st.integers(0, 10_000), n_ops=st.integers(10, 150))
+def test_hot_tier_conservation_under_random_traces(hot, extra, seed,
+                                                   n_ops):
+    """Arbitrary bind/pin/unpin/touch/release traces preserve tier
+    conservation (free slots + residents == hot_slots), never demote a
+    pinned page, and raise OutOfHotSlots only when nothing is
+    demotable."""
+    total = hot + extra
+    rng = random.Random(seed)
+    tier = HotTier(hot, total)
+    pins = {}                               # page -> pin count (mirror)
+    for _ in range(n_ops):
+        op = rng.choice(["bind", "pin", "unpin", "touch", "release"])
+        resident = [p for p in range(total) if tier.is_resident(p)]
+        if op == "bind":
+            cold = [p for p in range(total) if not tier.is_resident(p)]
+            if not cold:
+                continue
+            page = rng.choice(cold)
+            try:
+                slot, victim = tier.bind(page)
+            except OutOfHotSlots:
+                assert tier.free_slot_count == 0
+                assert tier.demotable_count == 0
+                continue
+            if victim is not None:
+                assert pins.get(victim, 0) == 0, "pinned page demoted"
+                assert not tier.is_resident(victim)
+            assert tier.slot_of(page) == slot
+        elif op == "pin" and resident:
+            page = rng.choice(resident)
+            tier.pin(page)
+            pins[page] = pins.get(page, 0) + 1
+        elif op == "unpin":
+            pinned = [p for p, c in pins.items() if c > 0]
+            if not pinned:
+                continue
+            page = rng.choice(pinned)
+            tier.unpin(page)
+            pins[page] -= 1
+        elif op == "touch" and resident:
+            tier.touch(rng.choice(resident))
+        elif op == "release" and resident:
+            unpinned = [p for p in resident if pins.get(p, 0) == 0]
+            if not unpinned:
+                continue
+            tier.release(rng.choice(unpinned))
+        tier.check()
+        assert tier.free_slot_count + tier.resident_count == hot
+        assert (tier.pinned_count + tier.demotable_count
+                == tier.resident_count)
+    # teardown: unpin + release everything; every slot must come back
+    for p, c in pins.items():
+        for _ in range(c):
+            tier.unpin(p)
+    for p in range(total):
+        if tier.is_resident(p):
+            tier.release(p)
+    tier.check()
+    assert tier.free_slot_count == hot
+
+
+def test_hot_tier_lru_order_and_avoid():
+    tier = HotTier(2, 8)
+    tier.bind(0)
+    tier.bind(1)                           # LRU: 0, 1
+    tier.touch(0)                          # LRU: 1, 0
+    _, victim = tier.bind(2)
+    assert victim == 1                     # least-recently-touched
+    _, victim = tier.bind(3, avoid=frozenset({0}))
+    assert victim == 2                     # 0 excluded -> next LRU
+    tier.check()
+
+
+def test_hot_tier_pinned_never_victim():
+    tier = HotTier(1, 4)
+    tier.bind(0)
+    tier.pin(0)
+    with pytest.raises(OutOfHotSlots):
+        tier.bind(1)                       # sole slot is pinned
+    tier.unpin(0)                          # joins LRU, demotable again
+    _, victim = tier.bind(1)
+    assert victim == 0
+    assert tier.entry(0) == HotTier.CAPACITY    # tier bit
+    assert tier.entry(1) == tier.slot_of(1)
+    tier.check()
+
+
+def test_hot_tier_release_hook_frees_slot():
+    """The allocator's release hook retires residency on every free
+    path without the caller knowing about tiers."""
+    alloc = PageAllocator(8)
+    tier = HotTier(2, 8)
+    alloc.add_release_hook(tier.release)
+    p = alloc.alloc()
+    tier.bind(p)
+    alloc.free([p])                        # refcount 0 fires the hook
+    assert not tier.is_resident(p)
+    assert tier.free_slot_count == 2
+    alloc.check()
+    tier.check()
+
+
+def test_hot_tier_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        HotTier(0, 4)                      # no slots
+    with pytest.raises(ValueError):
+        HotTier(8, 4)                      # hot tier larger than flash
+    tier = HotTier(2, 4)
+    tier.bind(1)
+    with pytest.raises(ValueError):
+        tier.bind(1)                       # double bind
+    tier.pin(1)
+    with pytest.raises(ValueError):
+        tier.unpin(0)                      # unpin of unpinned page
+
+
+def test_prefix_cache_peek_has_no_side_effects():
+    """lookup(record=False) — the prefetcher's peek — must not touch
+    hit/lookup counters or LRU order, or prefetch would distort the
+    hit-rate stats and keep cold entries artificially warm."""
+    T = 4
+    alloc = PageAllocator(16)
+    cache = PrefixCache(alloc, T)
+    prompt = list(range(8))
+    _register(cache, alloc, prompt, T)
+    before = (cache.hits, cache.lookups)
+    peek = cache.lookup(prompt, record=False)
+    assert peek.exact is not None
+    assert (cache.hits, cache.lookups) == before
+    hit = cache.lookup(prompt)             # recorded lookup still works
+    assert hit.exact is not None
+    assert cache.hits > before[0] and cache.lookups > before[1]
 
 
 def test_allocator_rejects_bad_ops():
