@@ -46,12 +46,16 @@ SERVING_PATH = REPO_ROOT / "BENCH_serving.json"
 # with runner speed far more than steady-state serving does.
 SERVING_GATED_SUFFIXES = ("/wall", "/steps_to_drain",
                           "/ttft_p50", "/tpot_p50")
-# informational prefixes: serving/spec/* rows (speculative decoding)
-# and serving/tiered/* rows (tiered flash KV hierarchy, DESIGN.md §13)
-# stay ungated while each feature's trajectory accumulates — the bench
-# itself hard-fails on output divergence, accepted_per_step <= 1, a
-# hot tier that never misses, or prefetch failing to beat the ablation
-SERVING_UNGATED_PREFIXES = ("serving/spec/", "serving/tiered/")
+# informational prefixes: serving/spec/* rows (speculative decoding),
+# serving/tiered/* rows (tiered flash KV hierarchy, DESIGN.md §13) and
+# serving/async/* rows (overlapped pipeline under Poisson load,
+# DESIGN.md §14) stay ungated while each feature's trajectory
+# accumulates — the bench itself hard-fails on output divergence,
+# accepted_per_step <= 1, a hot tier that never misses, prefetch
+# failing to beat the ablation, or the overlapped drain losing to the
+# synchronous one
+SERVING_UNGATED_PREFIXES = ("serving/spec/", "serving/tiered/",
+                            "serving/async/")
 # same mechanism for kernel rows: the 100K split-page partition sweep
 # stays informational while its trajectory accumulates (the landing run
 # has no committed baseline); the correctness of the split is gated by

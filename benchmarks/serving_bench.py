@@ -53,14 +53,43 @@ single-tier pool:
   serving/tiered/pool_util_hot        peak hot-resident / hot slots
   serving/tiered/pool_util_capacity   peak live flash pages / flash pool
 
+Overlapped host/device pipeline (DESIGN.md §14) gets a Poisson-arrival
+open-loop trace — requests arrive on their own clock, not when a slot
+frees — drained twice through the SAME load generator, overlap on and
+off, hard-failing on token divergence OR on the overlapped drain
+losing to the synchronous one.  The drain is a modeled-device replay:
+the real scheduler decodes real tokens on CPU-XLA, and every dispatched
+decode step additionally occupies a MODELED kvnand-d device window
+(flashsim.serving_step_time with host_s=0 — the flash-read latency a
+CPU cannot emulate; the XLA compute rides inside it).  `collect()`
+blocks until the oldest step's modeled completion, steps serialize on
+the modeled device, and the two disciplines differ only in WHEN the
+host half runs: the synchronous loop pays window + host per step, the
+pipelined loop does step N+1's host half inside step N's window —
+dev + host vs max(dev, host), the exact comparison the flashsim model
+makes, here executed by the real scheduler under real load.  (This
+container is single-core: without the modeled window, JAX's own async
+dispatch plus CPU timesharing make the two disciplines statistically
+indistinguishable — there is no second core for "overlap" to use.)
+
+  serving/async/wall                  end-to-end µs, overlap ON (the
+        derived column carries the overlap-off wall and the speedup)
+  serving/async/wall_overlap_off      the synchronous ablation
+  serving/async/device_idle_frac      % of the overlapped drain's wall
+        with NO step in flight (sync fraction in derived — the host
+        time the pipeline hides; feeds flashsim.overlap_speedup)
+  serving/async/goodput_under_sla     req/s finishing within the SLA
+        (TTFT + max_new x TPOT budget) under overlap
+
 `wall`, `steps_to_drain`, and the ttft/tpot p50 rows are gated by
 check_regression.py (p95 rows are informational — compile-dominated;
-the serving/spec/* and serving/tiered/* rows ride the ungated-prefix
-mechanism while those features land); counter rows carry the count in
-`us_per_call` (the harness's one numeric column) with the unit spelled
-out in `derived`.
+the serving/spec/*, serving/tiered/* and serving/async/* rows ride the
+ungated-prefix mechanism while those features land); counter rows
+carry the count in `us_per_call` (the harness's one numeric column)
+with the unit spelled out in `derived`.
 """
 import time
+from collections import deque
 
 import jax
 import numpy as np
@@ -138,6 +167,104 @@ def _drain_tiered(cfg, params, eng, uniq, *, prefetch=True):
             server.release(u)
     dt = time.perf_counter() - t0
     return dt, outs, server.stats
+
+
+N_ASYNC = 12
+ASYNC_RATE_HZ = 120.0           # open-loop arrivals fast enough to keep
+                                # a backlog — overlap has work to hide
+ASYNC_SLA_S = 2.0               # e2e budget per request (reduced model)
+
+
+def _poisson_arrivals(n, rate_hz):
+    rng = np.random.default_rng(29)
+    return np.cumsum(rng.exponential(1.0 / rate_hz, n)).tolist()
+
+
+def _drain_poisson(cfg, params, eng, prompts, arrivals, warmup, *,
+                   overlap, device_s):
+    """Open-loop drain: submit each prompt at its arrival offset while
+    stepping the scheduler — the serving shape the overlapped pipeline
+    exists for.  Both modes run the SAME generator; only the stepping
+    discipline (dispatch N+1 before collect N vs dispatch; collect)
+    differs.
+
+    Every dispatched decode step occupies the modeled kvnand-d device
+    for `device_s` (the flash-read window CPU-XLA cannot emulate; the
+    real XLA compute of the step rides inside it).  Modeled steps
+    serialize — step N+1's window opens when step N's closes — and
+    `collect` blocks until the oldest step's modeled completion.  The
+    synchronous discipline therefore pays window + host per step; the
+    pipelined one runs the next step's host half inside the current
+    window.  Prefill chunks execute host-side inside `dispatch` in both
+    disciplines and are deliberately NOT charged a window (symmetric,
+    so the A/B isolates the decode pipeline).
+
+    `warmup` prompts have the SAME lengths as `prompts` but different
+    content: chunk jit signatures key on (first-chunk, length) only, so
+    the warmup drain compiles every signature the timed window will hit
+    WITHOUT seeding the prefix cache with the timed prompts — cache
+    hits would both skew the measurement and re-prefill evicted entries
+    from mid-page offsets, compiling fresh chunk lengths mid-window."""
+    from repro.serving.api import (KVNANDServer, SamplingParams,
+                                   ServerConfig)
+
+    server = KVNANDServer(
+        ServerConfig(scheduler="interleaved", engine=eng,
+                     batch_slots=SLOTS, max_context=MAX_CONTEXT,
+                     prefill_chunk_tokens=CHUNK, overlap=overlap),
+        cfg=cfg, params=params)
+    sp = SamplingParams(max_new_tokens=MAX_NEW)
+    server.generate(warmup, sp)             # warmup: pay ALL the compiles
+    uids = {}
+    nxt = 0
+    deadlines = deque()                     # modeled completion, oldest 1st
+    last_dl = 0.0
+
+    def _dispatch():
+        nonlocal last_dl
+        before = server.pending_steps()
+        server.dispatch()
+        if server.pending_steps() > before:
+            last_dl = max(time.perf_counter(), last_dl) + device_s
+            deadlines.append(last_dl)
+
+    def _collect():
+        if deadlines:
+            time.sleep(max(0.0, deadlines[0] - time.perf_counter()))
+        server.collect()
+        while len(deadlines) > server.pending_steps():
+            deadlines.popleft()
+
+    t0 = time.perf_counter()
+    # device-idle accounting starts at t0, not at the warmup's end
+    server._batcher._idle_since = time.monotonic()
+    idle0 = server.stats["device_idle_s"]
+    steps0 = server.stats["steps"]
+    while nxt < len(prompts) or server._busy() or server.pending_steps():
+        now = time.perf_counter() - t0
+        while nxt < len(prompts) and arrivals[nxt] <= now:
+            uids[nxt] = server.submit(prompts[nxt], sp)
+            nxt += 1
+        if not server._busy() and not server.pending_steps():
+            if nxt < len(prompts):          # idle until the next arrival
+                time.sleep(max(0.0, arrivals[nxt]
+                               - (time.perf_counter() - t0)))
+            continue
+        if overlap:
+            if server.pending_steps() == 0 and server._busy():
+                _dispatch()                 # prime the pipeline
+            if server._busy():
+                _dispatch()                 # step N+1 onto the device
+            _collect()                      # step N's tokens
+        else:
+            _dispatch()
+            _collect()
+    wall = time.perf_counter() - t0
+    outs = {i: server.output(u) for i, u in uids.items()}
+    st = dict(server.stats)
+    st["idle_s"] = st["device_idle_s"] - idle0
+    st["steps"] = st["steps"] - steps0
+    return wall, outs, st
 
 
 def _drain(scheduler, cfg, params, eng, prompts, *, slots=SLOTS,
@@ -328,6 +455,66 @@ def run():
          st_on["pool_peak_pages"] / st_on["pool_total_pages"] * 100.0,
          f"% peak: {st_on['pool_peak_pages']} of "
          f"{st_on['pool_total_pages']} flash pages live")
+
+    # overlapped host/device pipeline (DESIGN.md §14): the SAME
+    # Poisson-arrival trace through both stepping disciplines over the
+    # modeled kvnand-d decode window; tokens must match exactly and the
+    # pipelined drain must win wall-clock (best of 2 per mode — arrival
+    # sleeps and modeled windows are identical, so the min isolates the
+    # stepping discipline from runner noise)
+    dev_s = fs.serving_step_time(sysm, get_config(ARCH), MAX_CONTEXT,
+                                 0.0, overlap=False)
+    rng = np.random.default_rng(31)
+    alens = rng.integers(5, 45, N_ASYNC)
+    aprompts = [rng.integers(1, cfg.vocab_size, int(n)).tolist()
+                for n in alens]
+    wrng = np.random.default_rng(37)        # same lengths, fresh content
+    awarmup = [wrng.integers(1, cfg.vocab_size, int(n)).tolist()
+               for n in alens]
+    arrivals = _poisson_arrivals(N_ASYNC, ASYNC_RATE_HZ)
+    runs = {}
+    for overlap in (False, True):
+        runs[overlap] = min(
+            (_drain_poisson(cfg, params, shared, aprompts, arrivals,
+                            awarmup, overlap=overlap, device_s=dev_s)
+             for _ in range(2)),
+            key=lambda r: r[0])
+    (wall_off, ao_off, ast_off) = runs[False]
+    (wall_on, ao_on, ast_on) = runs[True]
+    for i in ao_on:
+        if ao_on[i].token_ids != ao_off[i].token_ids:
+            raise AssertionError(
+                f"overlapped pipeline diverged from the synchronous "
+                f"schedule on request {i}")
+    if wall_on >= wall_off:
+        raise AssertionError(
+            f"overlapped drain did not beat the synchronous one "
+            f"({wall_on * 1e3:.1f} ms on vs {wall_off * 1e3:.1f} ms off)")
+    idle_on = ast_on["idle_s"] / wall_on
+    idle_off = ast_off["idle_s"] / wall_off
+    # the host time the sync loop serializes, per step: what the DSE's
+    # overlap recommendation consumes (flashsim.overlap_speedup)
+    host_s = ast_off["idle_s"] / max(ast_off["steps"], 1)
+    from repro.core import dse
+    rec = dse.recommend_overlap(sysm, get_config(ARCH), MAX_CONTEXT,
+                                host_s)
+    emit("serving/async/wall", wall_on * 1e6,
+         f"us Poisson drain, overlap on; {wall_off * 1e6:.0f} us off "
+         f"(speedup {wall_off / wall_on:.2f}x, {N_ASYNC} requests at "
+         f"{ASYNC_RATE_HZ:.0f}/s, modeled kvnand-d decode window "
+         f"{dev_s * 1e6:.0f} us/step)")
+    emit("serving/async/wall_overlap_off", wall_off * 1e6,
+         "us: the synchronous-stepping ablation, same trace and "
+         "modeled device windows")
+    emit("serving/async/device_idle_frac", idle_on * 100.0,
+         f"% of wall with no step in flight (sync {idle_off * 100.0:.1f}%"
+         f"; host {host_s * 1e6:.0f} us/step, dse.recommend_overlap="
+         f"{rec} on kvnand-d)")
+    met = sum(1 for o in ao_on.values()
+              if o.finish_time - o.submit_time <= ASYNC_SLA_S)
+    emit("serving/async/goodput_under_sla", met / wall_on,
+         f"req/s within the {ASYNC_SLA_S:.1f}s SLA "
+         f"({met}/{len(ao_on)} requests met it)")
 
 
 if __name__ == "__main__":

@@ -172,6 +172,20 @@ def recommend_attn_partitions(sys: fs.SystemConfig, cfg: ModelConfig,
     return best_p if base / max(best_lat, 1e-30) >= min_speedup else 1
 
 
+def recommend_overlap(sys: fs.SystemConfig, cfg: ModelConfig, seq: int,
+                      host_s: float, *, span: int = 1,
+                      min_speedup: float = 1.02) -> bool:
+    """Should the serving loop run the overlapped (dispatch N+1 before
+    collect N) schedule on `sys`?  `host_s` is the measured per-step
+    host overhead (the serving bench derives it from the synchronous
+    loop's `device_idle_s / steps`).  Overlap must BEAT the synchronous
+    schedule by `min_speedup` to be recommended — when device compute
+    dwarfs host work the pipeline's phantom-step and staging complexity
+    buys nothing (DESIGN.md §14)."""
+    return fs.overlap_speedup(sys, cfg, seq, host_s,
+                              span=span) >= min_speedup
+
+
 def recommend_hot_pages(sys: fs.SystemConfig, cfg: ModelConfig, seq: int,
                         *, slots: int = 1, page_tokens: int = 64,
                         total_pages: int = 0) -> int:

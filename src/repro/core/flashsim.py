@@ -490,6 +490,48 @@ def tier_stall_time(sys: SystemConfig, cfg: ModelConfig,
 
 
 # ---------------------------------------------------------------------------
+# Serving step model (DESIGN.md §14): host overhead and overlap
+# ---------------------------------------------------------------------------
+# A SERVING decode step is device compute plus per-step host work the
+# device model cannot see: token emission, finish sweeps, admission and
+# page-table bookkeeping.  The synchronous scheduler serializes the two
+# (the device idles for the host share every step); the overlapped
+# scheduler dispatches step N+1 before collecting step N, so each
+# steady-state step costs max(device, host) — classic one-deep software
+# pipelining.  `host_s` is measured, not modeled: the serving bench
+# derives it from the synchronous loop's host-observed device-idle
+# fraction (`stats["device_idle_s"] / steps`).
+
+def serving_step_time(sys: SystemConfig, cfg: ModelConfig, seq: int,
+                      host_s: float, *, overlap: bool,
+                      span: int = 1, partitions: int = 1) -> float:
+    """Seconds per steady-state serving step: device compute for a
+    span-wide decode/verify step at context `seq`, serialized with
+    (synchronous) or hidden behind (overlapped) `host_s` of host-side
+    scheduling work."""
+    if host_s < 0:
+        raise ValueError(f"host_s must be >= 0, got {host_s}")
+    dev = _step_breakdown(sys, cfg, seq, span=span, kv_writes=float(span),
+                          partitions=partitions).total
+    if overlap:
+        return max(dev, host_s)
+    return dev + host_s
+
+
+def overlap_speedup(sys: SystemConfig, cfg: ModelConfig, seq: int,
+                    host_s: float, *, span: int = 1,
+                    partitions: int = 1) -> float:
+    """Synchronous / overlapped steady-state step time: the wall-clock
+    factor the pipelined scheduler buys.  Bounded by 2.0 (host and
+    device perfectly balanced) and ~1.0 when either side dominates."""
+    sync = serving_step_time(sys, cfg, seq, host_s, overlap=False,
+                             span=span, partitions=partitions)
+    piped = serving_step_time(sys, cfg, seq, host_s, overlap=True,
+                              span=span, partitions=partitions)
+    return sync / max(piped, 1e-30)
+
+
+# ---------------------------------------------------------------------------
 # Energy model (per decoded token, J)
 # ---------------------------------------------------------------------------
 

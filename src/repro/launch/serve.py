@@ -65,7 +65,30 @@ def serve(argv=None):
                     "(prompt-lookup self-drafting, DESIGN.md §11); "
                     "0 forces sequential decode, unset defers to the "
                     "EngineConfig (e.g. a --use-dse pick)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined stepping (DESIGN.md §14): dispatch "
+                    "step N+1 before collecting step N so host "
+                    "bookkeeping hides behind device compute; outputs "
+                    "stay token-identical to the synchronous loop")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP instead of running the batch "
+                    "trace: POST /v1/completions (one-shot + SSE), "
+                    "GET /metrics — the asyncio front door "
+                    "(repro.serving.async_server)")
+    ap.add_argument("--port", type=int, default=8777,
+                    help="HTTP port for --http (0 = ephemeral)")
     args = ap.parse_args(argv)
+
+    if args.http:
+        from repro.serving.async_server import main as http_main
+        http_argv = ["--arch", args.arch, "--port", str(args.port),
+                     "--slots", str(args.slots),
+                     "--max-context", str(args.max_context)]
+        if args.reduced:
+            http_argv.append("--reduced")
+        if not args.overlap:
+            http_argv.append("--no-overlap")
+        return http_main(http_argv)
 
     pool_kw = dict(shared_pool=args.shared_pool,
                    total_pages=args.total_pages,
@@ -89,7 +112,8 @@ def serve(argv=None):
         max_context=args.max_context,
         prefill_chunk_tokens=args.chunk_tokens,
         speculation_k=args.speculation_k,
-        tier_prefetch=not args.no_tier_prefetch))
+        tier_prefetch=not args.no_tier_prefetch,
+        overlap=args.overlap))
     cfg = server.cfg
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,

@@ -7,8 +7,8 @@ Everything a caller needs to serve mixed multi-user traffic lives here:
     max_new_tokens / stop_token_ids / logprobs;
   * `RequestOutput` — the finished request: token ids, optional
     per-token logprobs, a `finish_reason` in {stop, length, capacity,
-    aborted}, and submit/first-token/finish timestamps with derived
-    TTFT (time to first token) and TPOT (time per output token);
+    aborted, deadline}, and submit/first-token/finish timestamps with
+    derived TTFT (time to first token) and TPOT (time per output token);
   * `StreamEvent` — one incrementally generated token, as yielded by
     `KVNANDServer.step()` / `stream()`; the events of a request
     concatenate exactly to its final `RequestOutput.token_ids`;
@@ -34,6 +34,7 @@ The full reference for this surface is docs/api.md.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Union
 
 import jax
@@ -100,6 +101,14 @@ class ServerConfig:
     # every capacity-tier map-in stalls (the ablation serving_bench
     # measures).  Ignored by single-tier pools.
     tier_prefetch: bool = True
+    # overlapped host/device pipeline (DESIGN.md §14): stream()/run()/
+    # generate() dispatch step N+1 before collecting step N, so host
+    # token emission and bookkeeping hide behind device compute.
+    # Outputs are token-identical to the synchronous schedule (same
+    # per-request PRNG streams, same in-order per-request emission);
+    # speculative decoding degrades to the synchronous schedule
+    # automatically.
+    overlap: bool = False
 
     def __post_init__(self):
         if self.scheduler not in _SCHEDULERS:
@@ -140,7 +149,7 @@ class RequestOutput:
     prompt: List[int]
     token_ids: List[int]
     logprobs: Optional[List[float]]
-    finish_reason: str              # stop | length | capacity | aborted
+    finish_reason: str      # stop | length | capacity | aborted | deadline
     submit_time: float
     first_token_time: Optional[float]   # None: aborted before any token
     finish_time: float
@@ -226,16 +235,30 @@ class KVNANDServer:
     # -- request lifecycle ----------------------------------------------
     def submit(self, prompt: Sequence[int],
                params: Optional[SamplingParams] = None, *,
-               uid: Optional[int] = None) -> int:
+               uid: Optional[int] = None, priority: int = 0,
+               deadline: Optional[float] = None) -> int:
         """Queue one prompt; returns its uid.  Raises (and records
-        nothing) on invalid prompts — empty, over slot/pool capacity."""
+        nothing) on invalid prompts — empty, over slot/pool capacity.
+
+        `priority` (lower admits first; default class 0) and `deadline`
+        (seconds from now) shape the scheduler's ADMISSION order:
+        waiting requests admit by (priority, nearest deadline, submit
+        order), and a request still queued when its deadline passes
+        finishes as ``"deadline"`` without consuming pages or steps.
+        Neither preempts already-running requests."""
         if uid is None:
             uid = self._next_uid
         if uid in self._requests:
             raise ValueError(f"uid {uid} already submitted")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0 seconds, "
+                             f"got {deadline}")
         params = params or SamplingParams()
         req = Request(uid=uid, prompt=list(prompt),
-                      max_new=params.max_new_tokens, params=params)
+                      max_new=params.max_new_tokens, params=params,
+                      priority=priority,
+                      deadline_ts=(time.monotonic() + deadline
+                                   if deadline is not None else None))
         self._batcher.submit(req)
         self._requests[uid] = req
         self._streamed[uid] = 0
@@ -257,6 +280,24 @@ class KVNANDServer:
         finished WITHOUT a fresh token (aborts)."""
         self._batcher.step()
         return self._drain_events()
+
+    def dispatch(self) -> int:
+        """Pipelined driver surface (DESIGN.md §14): enqueue the next
+        step's device work without materializing its tokens.  Pair every
+        dispatch with a later `collect()`; `step()` is the synchronous
+        composition of the two."""
+        return self._batcher.dispatch()
+
+    def collect(self) -> List[StreamEvent]:
+        """Materialize the oldest dispatched step and return its events
+        (same shape as `step()`'s)."""
+        self._batcher.collect()
+        return self._drain_events()
+
+    def pending_steps(self) -> int:
+        """Dispatched-but-uncollected scheduler steps (0 outside the
+        pipelined driver)."""
+        return self._batcher.pending_steps
 
     def _drain_events(self) -> List[StreamEvent]:
         events: List[StreamEvent] = []
@@ -284,14 +325,34 @@ class KVNANDServer:
 
     def stream(self) -> Iterator[StreamEvent]:
         """Iterate stepwise until every submitted request finishes,
-        yielding each new token as its step produces it."""
+        yielding each new token as its step produces it.  With
+        ``ServerConfig.overlap`` the loop software-pipelines the
+        scheduler — dispatch step N+1, then collect step N — so the
+        host-side emission each iteration yields from overlaps the
+        device compute already in flight; each request's token stream
+        is identical either way (only the cross-request interleaving
+        may shift by one step around prefill handoffs)."""
         steps = 0
-        while self._busy():
+        if not self.config.overlap:
+            while self._busy():
+                if steps >= self.config.max_steps:
+                    raise RuntimeError(
+                        f"stream: max_steps={self.config.max_steps} "
+                        "exhausted with requests still pending")
+                yield from self.step()
+                steps += 1
+            yield from self._drain_events()
+            return
+        if self._busy():
+            self._batcher.dispatch()    # prime the pipeline (step 0)
+        while self._busy() or self._batcher.pending_steps:
             if steps >= self.config.max_steps:
                 raise RuntimeError(
                     f"stream: max_steps={self.config.max_steps} exhausted "
                     "with requests still pending")
-            yield from self.step()
+            if self._busy():
+                self._batcher.dispatch()    # step N+1 onto the device
+            yield from self.collect()       # step N's tokens (host sync)
             steps += 1
         # aborts between steps retire requests without a scheduler step:
         # flush their terminal marker events

@@ -67,6 +67,42 @@ so admissions pin warm pages instead of demand-faulting (faults =
 `tier_stall_tokens`).  Pages mapped by a live slot are pinned hot and
 never demoted, so decode/chunked-prefill/verify walks cannot fault.
 
+Pipelined stepping (DESIGN.md §14): `step()` is now the back-to-back
+composition of two halves —
+
+  * `dispatch()` runs every piece of host bookkeeping step N+1 needs
+    BEFORE its device work (admission, prefill chunks, page ensures /
+    COWs, table pushes, tier promotions) and then ENQUEUES the jitted
+    decode/verify step, keeping the returned token/logprob arrays as
+    un-materialized device futures in an `_Inflight` record;
+  * `collect()` materializes the OLDEST in-flight step with one
+    `jax.device_get` round-trip, emits its tokens (TTFT/TPOT stamps are
+    taken here, when tokens are host-visible), sweeps finishes, and
+    runs the queue-ahead tier prefetch.
+
+The synchronous schedule (`step()` = dispatch; collect) is bit-identical
+to the pre-split loop.  An overlapped driver (serving/api.py `stream()`
+with ``ServerConfig.overlap``, serving/async_server.py) instead calls
+dispatch(N+1) BEFORE collect(N): the host emission/bookkeeping of step N
+then runs concurrently with the device compute of step N+1, because the
+dispatch feeds step N+1's token inputs straight from step N's on-device
+`toks` array (a `jnp.where` merge against the host staging buffer — the
+double-buffered token/mask path) and never blocks.  Stop-token finishes
+are host-unpredictable at dispatch time, so an overlapped step may carry
+PHANTOM rows for slots that turn out to have finished; collect discards
+them by request identity (`_Inflight.reqs`), and the appended garbage
+token is memory-safe because appends only land in slot-private pages
+within the slot's reservation.  Length/capacity finishes ARE predictable
+from host state, and such slots are excluded from the next dispatch.
+Verify (speculative) steps consume host-visible history for drafts, so
+`dispatch()` drains the pipeline first — speculation runs unoverlapped
+but token-identical.
+
+Admission order: `_queue_pick` admits by (priority, deadline, submit
+order) — the default priority=0 / no-deadline case degrades to plain
+FIFO, and queued requests whose deadline has already passed finish as
+``"deadline"`` without costing pages or steps.
+
 `SpliceBatcher` keeps the old admit-time full prefill + jit'd slot splice
 as the measured baseline (benchmarks/serving_bench.py) and for parity
 tests; the interleaved step never touches the splice path.  The splice
@@ -125,7 +161,11 @@ class Request:
     done: bool = False
     params: Optional[SamplingParams] = None
     logprobs: List[float] = dataclasses.field(default_factory=list)
-    finish_reason: Optional[str] = None   # stop|length|capacity|aborted
+    # stop|length|capacity|aborted|deadline
+    finish_reason: Optional[str] = None
+    priority: int = 0         # lower admits first (0 = default class)
+    deadline_ts: Optional[float] = None   # monotonic; expired queued
+    order: int = 0            # submit sequence (admission tiebreak)
     submit_ts: Optional[float] = None
     first_ts: Optional[float] = None
     finish_ts: Optional[float] = None
@@ -157,6 +197,26 @@ class _PrefillState:
     n: int                  # true prompt length
     pos: int = 0            # next chunk's first token (prompt-relative)
     order: int = 0          # admission order (FIFO chunk scheduling)
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched, not-yet-collected decode/verify step (§14).
+
+    Carries the jitted step's un-materialized device arrays plus the
+    host snapshot `collect()` needs to emit without consulting mutable
+    scheduler state: the per-slot Request identities at dispatch time
+    (a slot whose occupant changed between dispatch and collect — stop
+    finish, abort — marks that row a discarded PHANTOM) and the slots
+    whose capacity finish was already length-predictable at dispatch."""
+    kind: str                       # "decode" | "verify"
+    active: List[int]
+    reqs: Dict[int, Request]
+    toks: jax.Array                 # device future until collect()
+    lps: jax.Array
+    acc: Optional[jax.Array] = None          # verify: accepted counts
+    allowed: Optional[np.ndarray] = None     # verify: per-row draft cap
+    cap_finish: Set[int] = dataclasses.field(default_factory=set)
 
 
 class ContinuousBatcher:
@@ -203,6 +263,15 @@ class ContinuousBatcher:
         self._lengths = np.zeros(batch_slots, np.int64)
         self._prefill_live: Dict[int, _PrefillState] = {}
         self._admit_seq = 0
+        self._submit_seq = 0
+        # dispatched-but-uncollected steps (DESIGN.md §14): depth 0 in
+        # the synchronous schedule, briefly 2 in the overlapped one
+        # (dispatch N+1 lands before collect N pops)
+        self._inflight: Deque[_Inflight] = deque()
+        # host-observed device idleness: set when a collect leaves no
+        # step in flight, cleared (and accumulated) at the next device
+        # enqueue — exact in the synchronous schedule, ~0 when overlapped
+        self._idle_since: Optional[float] = None
         self.shared = eng.shared_pool
         self.alloc: Optional[PageAllocator] = None
         self.alloc_w: Optional[PageAllocator] = None
@@ -233,7 +302,13 @@ class ContinuousBatcher:
                 "back — run with speculation_k=0")
         self.spec_k = speculation_k
 
-        def _decode_fn(p, c, t, a, temps, tk, tp, seeds, pos):
+        def _decode_fn(p, c, t, chain, prev_t, a, temps, tk, tp, seeds,
+                       pos):
+            # double-buffered feed merge (DESIGN.md §14): rows chained
+            # on an uncollected step take that step's device token;
+            # folding the select into the step keeps the overlapped
+            # dispatch free of eager per-step ops on the host path
+            t = jnp.where(chain[:, None], prev_t[:, None], t)
             logits, c = self.engine.decode_step(p, c, t, active=a)
             toks, lps = sample_with_logprobs(
                 logits, request_keys(seeds, pos),
@@ -242,6 +317,8 @@ class ContinuousBatcher:
             return toks, lps, c
 
         self._decode = jax.jit(_decode_fn, donate_argnums=(1,))
+        self._no_chain = (np.zeros(self.B, bool),
+                          jnp.zeros(self.B, jnp.int32))
 
         def _verify_fn(p, c, t, a, allowed, temps, tk, tp, seeds, pos):
             # sampling stays a scheduler concern: the engine calls back
@@ -279,7 +356,9 @@ class ContinuousBatcher:
                       "tier_hot_slots": 0, "tier_hit_pages": 0,
                       "tier_miss_pages": 0, "tier_stall_tokens": 0,
                       "tier_promotes": 0, "tier_demotes": 0,
-                      "tier_prefetch_pages": 0, "tier_peak_hot": 0}
+                      "tier_prefetch_pages": 0, "tier_peak_hot": 0,
+                      "phantom_tokens": 0, "deadline_drops": 0,
+                      "device_idle_s": 0.0}
         self._compile_keys = set()
         if self.shared:
             self._init_shared_pool(eng)
@@ -423,7 +502,10 @@ class ContinuousBatcher:
         if (self.tier is None or not self.tier_prefetch or not self.queue
                 or self.prefix_cache is None):
             return
-        hit = self.prefix_cache.lookup(self.queue[0].prompt, record=False)
+        # peek the next ADMISSION candidate (priority/deadline order,
+        # not the deque head) — the side-effect-free twin of _queue_pick
+        head = min(self.queue, key=self._admission_key)
+        hit = self.prefix_cache.lookup(head.prompt, record=False)
         pages = (hit.exact.pages if hit.exact is not None
                  else hit.full_pages)
         if not pages:
@@ -706,6 +788,8 @@ class ContinuousBatcher:
             req.max_new = req.params.max_new_tokens
         if req.submit_ts is None:
             req.submit_ts = time.monotonic()
+        req.order = self._submit_seq
+        self._submit_seq += 1
         n = len(req.prompt)
         cap = self.max_context - 1 - self._prefix
         if n == 0:
@@ -733,14 +817,42 @@ class ContinuousBatcher:
                     "EngineConfig.hot_pages")
         self.queue.append(req)
 
+    @staticmethod
+    def _admission_key(r: Request):
+        """Admission order: lowest priority class first, then nearest
+        deadline, then submit order — all defaults degrade to FIFO."""
+        return (r.priority,
+                r.deadline_ts if r.deadline_ts is not None else float("inf"),
+                r.order)
+
+    def _queue_pick(self) -> Optional[Request]:
+        """Sweep queued requests whose deadline already passed (they
+        finish as ``"deadline"`` without costing pages or steps), then
+        return — without removing — the best admission candidate."""
+        now = time.monotonic()
+        for r in [r for r in self.queue
+                  if r.deadline_ts is not None and now >= r.deadline_ts]:
+            self.queue.remove(r)
+            r.done = True
+            r.finish_reason = "deadline"
+            r.finish_ts = now
+            self.completed[r.uid] = r
+            self.stats["deadline_drops"] += 1
+        if not self.queue:
+            return None
+        return min(self.queue, key=self._admission_key)
+
     def _admit(self):
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
+                req = self._queue_pick()
+                if req is None:
+                    break
                 if self.shared:
-                    if not self._admit_shared(i):
-                        break          # FIFO head waits for pages
+                    if not self._admit_shared(i, req):
+                        break          # best candidate waits for pages
                     continue
-                req = self.queue.popleft()
+                self.queue.remove(req)
                 self.slots[i] = req
                 self._set_slot_params(i, req)
                 self._start_prefill(i, req)
@@ -758,11 +870,10 @@ class ContinuousBatcher:
             req, toks, n, pos=pos, order=self._admit_seq)
         self._admit_seq += 1
 
-    def _admit_shared(self, i: int) -> bool:
+    def _admit_shared(self, i: int, req: Request) -> bool:
         """Admission by KV footprint: reserve the request's worst-case
         pages against the pool; map any cached prefix read-only; admit
         only if the remainder fits free + evictable pages."""
-        req = self.queue[0]
         n = len(req.prompt)
         T = self.engine.eng.page_tokens
         need_g = self._pages_needed(req) if self.alloc is not None else 0
@@ -802,7 +913,7 @@ class ContinuousBatcher:
         if self.alloc_w is not None and need_w > self.alloc_w.free_count:
             return False
 
-        self.queue.popleft()
+        self.queue.remove(req)
         self.slots[i] = req
         self._set_slot_params(i, req)
         self.stats["admits"] += 1
@@ -877,10 +988,46 @@ class ContinuousBatcher:
             self._emit_token(i, ps.req, tok, lp)
 
     def step(self) -> int:
-        """One interleaved step: a token budget funds the decode batch
-        first (one token per active slot), then prefill chunks (FIFO over
-        admitted prompts) — admits never starve decoders; returns the
-        number of slots that advanced."""
+        """One interleaved step — `dispatch()` then `collect()` back to
+        back, the synchronous schedule (bit-identical to the pre-split
+        loop).  An overlapped driver instead primes one dispatch and
+        then runs dispatch(N+1); collect(N) so host post-processing of
+        step N overlaps device compute of step N+1 (DESIGN.md §14).
+        Returns the number of slots that advanced."""
+        chunks = self.dispatch()
+        return chunks + self.collect()
+
+    def _mark_device_busy(self):
+        """Close the host-observed device-idle window at the first
+        device enqueue after a pipeline-empty collect."""
+        if self._idle_since is not None:
+            self.stats["device_idle_s"] += time.monotonic() - self._idle_since
+            self._idle_since = None
+
+    def _will_finish(self, i: int, pend: int) -> bool:
+        """True when slot i's request is already CERTAIN to finish once
+        the pipeline drains — `pend` uncollected tokens ahead of it hit
+        its max_new budget, or an in-flight step predicted its capacity
+        finish.  Such slots are excluded from the next dispatch instead
+        of becoming guaranteed phantoms.  (Stop-token finishes are not
+        host-predictable; those rows dispatch and may be discarded.)"""
+        req = self.slots[i]
+        if len(req.output) + pend >= req.max_new:
+            return True
+        return any(i in inf.cap_finish and inf.reqs.get(i) is req
+                   for inf in self._inflight)
+
+    def dispatch(self) -> int:
+        """Host half of one scheduler step: admissions, prefill chunks
+        (budgeted — decode batch funded first), page ensures and table
+        pushes, then the jitted decode/verify ENQUEUE.  The step's
+        token/logprob outputs stay un-materialized device futures in
+        `self._inflight` until `collect()`.  Returns the number of
+        prefill chunks processed."""
+        if self._inflight and (self.spec_k > 0 or len(self._inflight) >= 2):
+            # verify steps draft from host-visible history, and the
+            # pipeline is one step deep — drain before dispatching again
+            self.collect()
         self._admit()
         n_decoding = sum(1 for i, r in enumerate(self.slots)
                          if r is not None and i not in self._prefill_live)
@@ -900,36 +1047,85 @@ class ContinuousBatcher:
             self._prefill_tick(i, ps)
             budget -= cost
             chunks_done += 1
+        pending = {i for inf in self._inflight for i in inf.active
+                   if self.slots[i] is inf.reqs[i]}
         active = [i for i, r in enumerate(self.slots)
-                  if r is not None and i not in self._prefill_live]
-        decoded = self._decode_batch(active)
-        self._tier_prefetch_tick()
+                  if r is not None and i not in self._prefill_live
+                  and not self._will_finish(i, int(i in pending))]
+        if active:
+            if self.spec_k > 0:
+                self._dispatch_verify(active)
+            else:
+                self._dispatch_sequential(active)
         self.stats["steps"] += 1
-        return decoded + chunks_done
+        return chunks_done
+
+    def collect(self) -> int:
+        """Host half of step N's completion: materialize the OLDEST
+        in-flight step (ONE `jax.device_get` round-trip for all of its
+        arrays), emit its tokens through the finish rules — TTFT/TPOT
+        timestamps are stamped here, when tokens are host-visible — then
+        run the queue-ahead tier prefetch.  Returns slots advanced; a
+        no-op (apart from the prefetch tick) when nothing is in flight."""
+        emitted = 0
+        if self._inflight:
+            inf = self._inflight.popleft()
+            if inf.kind == "verify":
+                emitted = self._collect_verify(inf)
+            else:
+                emitted = self._collect_decode(inf)
+        self._tier_prefetch_tick()
+        if not self._inflight:
+            self._idle_since = time.monotonic()
+        return emitted
+
+    @property
+    def pending_steps(self) -> int:
+        """Dispatched-but-uncollected steps (0 outside overlap mode)."""
+        return len(self._inflight)
 
     def _decode_batch(self, active: List[int]) -> int:
-        """One decode step over `active` slots (shared by both
-        schedulers — the parity pair must never diverge on this body).
-        With ``speculation_k > 0`` the step runs draft-and-verify —
-        same streams, same emitted tokens, up to k+1 of them per slot;
+        """One SYNCHRONOUS decode step over `active` slots (shared by
+        both schedulers — the parity pair must never diverge on this
+        body): dispatch immediately followed by its collect.  With
+        ``speculation_k > 0`` the step runs draft-and-verify — same
+        streams, same emitted tokens, up to k+1 of them per slot;
         otherwise (or when no row may accept) the sequential step."""
         if not active:
             return 0
         if self.spec_k > 0:
-            return self._verify_batch(active)
-        return self._sequential_batch(active)
+            self._dispatch_verify(active)
+        else:
+            self._dispatch_sequential(active)
+        inf = self._inflight.popleft()
+        return (self._collect_verify(inf) if inf.kind == "verify"
+                else self._collect_decode(inf))
 
-    def _sequential_batch(self, active: List[int]) -> int:
-        """One masked decode over `active` slots: sample each row through
-        its OWN params/PRNG stream inside the jitted step, advance
-        lengths, sweep completions."""
+    def _dispatch_sequential(self, active: List[int]):
+        """Enqueue one masked decode over `active` slots, sampling each
+        row through its OWN params/PRNG stream inside the jitted step.
+        Double-buffered token staging: a row whose previous token is
+        still on device (the overlapped schedule dispatches step N+1
+        before collecting step N) takes its input from the in-flight
+        step's `toks` future via an on-device merge, so the host never
+        syncs to build the feed; every other row is staged host-side
+        from `output[-1]` exactly as before."""
+        prev = self._inflight[-1] if self._inflight else None
         tokens = np.zeros((self.B, 1), np.int32)
         mask = np.zeros(self.B, bool)
         positions = np.zeros(self.B, np.int32)
+        chain = np.zeros(self.B, bool)
         for i in active:
-            tokens[i, 0] = self.slots[i].output[-1]
+            req = self.slots[i]
             mask[i] = True
-            positions[i] = len(self.slots[i].output)
+            if prev is not None and prev.reqs.get(i) is req:
+                # feed comes from the uncollected step's device token;
+                # the PRNG position accounts for that pending emission
+                chain[i] = True
+                positions[i] = len(req.output) + 1
+            else:
+                tokens[i, 0] = req.output[-1]
+                positions[i] = len(req.output)
         if self.shared and self.alloc is not None:
             # every active slot appends at its current position: make that
             # page exclusively writable (lazy alloc, or COW off a shared
@@ -938,24 +1134,46 @@ class ContinuousBatcher:
             for i in active:
                 self._ensure_page(i, int(self._lengths[i]) // T)
             self._push_tables()
+        ch, prev_t = ((chain, prev.toks) if chain.any()
+                      else self._no_chain)
+        self._mark_device_busy()
         self._count_compile("decode", self.B)
         # sampling params ride as traced per-slot arrays: any mix of
         # per-request combinations hits this one compiled signature
         toks, lps, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
+            self.params, self.cache, tokens, ch, prev_t,
             jnp.asarray(mask), jnp.asarray(self._temps),
             jnp.asarray(self._topk), jnp.asarray(self._topp),
             jnp.asarray(self._seeds), jnp.asarray(positions))
-        toks, lps = np.asarray(toks), np.asarray(lps)
         self._lengths[active] += 1
-        self.stats["decode_tokens"] += len(active)
-        for i in active:
-            req = self.slots[i]
+        cap = {i for i in active
+               if self._lengths[i] + 1 >= self.max_context}
+        self._inflight.append(_Inflight(
+            "decode", list(active),
+            {i: self.slots[i] for i in active}, toks, lps,
+            cap_finish=cap))
+
+    def _collect_decode(self, inf: _Inflight) -> int:
+        """Emit one collected sequential step: a single host transfer
+        fetches tokens and logprobs together, then each surviving row
+        advances through the finish rules."""
+        toks, lps = jax.device_get((inf.toks, inf.lps))
+        emitted = 0
+        for i in inf.active:
+            req = inf.reqs[i]
+            if self.slots[i] is not req:
+                # PHANTOM row (§14): the occupant stop-finished or
+                # aborted after this step dispatched — its appended
+                # token sits in pages `_finish` already recycled and is
+                # rewritten by the next occupant before becoming valid
+                self.stats["phantom_tokens"] += 1
+                continue
             self._emit_token(i, req, int(toks[i]), float(lps[i]))
-            if (self.slots[i] is req
-                    and self._lengths[i] + 1 >= self.max_context):
+            self.stats["decode_tokens"] += 1
+            emitted += 1
+            if self.slots[i] is req and i in inf.cap_finish:
                 self._finish(i, "capacity")
-        return len(active)
+        return emitted
 
     def _rollback_pages(self, i: int):
         """Host half of the speculative rollback: logical pages allocated
@@ -978,14 +1196,15 @@ class ContinuousBatcher:
             self._resv[i] += 1
             self._outstanding += 1
 
-    def _verify_batch(self, active: List[int]) -> int:
-        """One draft-and-verify step over `active` slots: each drafts up
-        to `spec_k` tokens by prompt lookup over its own history, the
-        engine scores the whole span in ONE jitted pass, and every slot
-        emits its accepted prefix plus the correction/bonus token through
-        the same `_emit_token` finish rules and per-request PRNG streams
-        as the sequential path — so outputs are identical token for
-        token, only the tokens-per-step changes."""
+    def _dispatch_verify(self, active: List[int]):
+        """Enqueue one draft-and-verify step over `active` slots: each
+        drafts up to `spec_k` tokens by prompt lookup over its own
+        history and the engine scores the whole span in ONE jitted pass.
+        Drafts, positions, and the span's page ensures all consume the
+        requests' host-visible emitted history, which is why `dispatch`
+        drains the pipeline before building a verify step — speculation
+        runs unoverlapped but token-identical (DESIGN.md §14)."""
+        assert not self._inflight, "verify dispatch needs a drained pipeline"
         S = self.spec_k + 1
         T = self.engine.eng.page_tokens
         tokens = np.zeros((self.B, S), np.int32)
@@ -1016,7 +1235,7 @@ class ContinuousBatcher:
             # slot at its max_new/capacity edge): the span forward would
             # be a k+1×-wide way to emit one token per slot — take the
             # sequential step instead
-            return self._sequential_batch(active)
+            return self._dispatch_sequential(active)
         if self.shared and self.alloc is not None:
             # back every page the span MAY write (positions up to
             # lengths + allowed): lazy alloc or COW, exactly like the
@@ -1027,6 +1246,7 @@ class ContinuousBatcher:
                 for lp in range(lo, hi + 1):
                     self._ensure_page(i, lp)
             self._push_tables()
+        self._mark_device_busy()
         self._count_compile("verify", self.B, S)
         (toks, lps, acc), self.cache = self._verify(
             self.params, self.cache, jnp.asarray(tokens),
@@ -1034,10 +1254,25 @@ class ContinuousBatcher:
             jnp.asarray(self._temps), jnp.asarray(self._topk),
             jnp.asarray(self._topp), jnp.asarray(self._seeds),
             jnp.asarray(positions))
-        toks, lps, acc = np.asarray(toks), np.asarray(lps), np.asarray(acc)
+        self._inflight.append(_Inflight(
+            "verify", list(active), reqs, toks, lps, acc=acc,
+            allowed=allowed))
+
+    def _collect_verify(self, inf: _Inflight) -> int:
+        """Emit one collected verify step: every slot emits its accepted
+        prefix plus the correction/bonus token through the same
+        `_emit_token` finish rules and per-request PRNG streams as the
+        sequential path — outputs identical token for token, only the
+        tokens-per-step changes.  Length advance and span rollback are
+        acceptance-dependent, so they live here on the collect side."""
+        toks, lps, acc = jax.device_get((inf.toks, inf.lps, inf.acc))
+        allowed = inf.allowed
         emitted = 0
-        for i in active:
-            req = reqs[i]
+        for i in inf.active:
+            req = inf.reqs[i]
+            if self.slots[i] is not req:
+                self.stats["phantom_tokens"] += 1
+                continue
             n = int(acc[i]) + 1           # tokens the device appended
             # spec accounting counts ROW-steps that actually offered a
             # draft (matching the per-request counter): the fleet-level
@@ -1068,7 +1303,7 @@ class ContinuousBatcher:
                 if self._lengths[i] + 1 >= self.max_context:
                     self._finish(i, "capacity")
         self.stats["decode_tokens"] += emitted
-        return len(active)
+        return emitted
 
     def run_to_completion(self, max_steps: int = 10_000):
         steps = 0

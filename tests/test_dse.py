@@ -89,3 +89,17 @@ def test_recommend_hot_pages():
                                    total_pages=max(base, 2)) == 0
     with pytest.raises(ValueError):
         dse.recommend_hot_pages(sys, cfg, 128, slots=0)
+
+
+def test_recommend_overlap():
+    """Pipelined stepping is a host-overhead knob (DESIGN.md §14): the
+    DSE only recommends it when measured host time is worth hiding."""
+    from repro.core import flashsim as fs
+    cfg = get_config("llama3.1-8b")
+    sys = fs.kvnand_d(8, 8, 4, 16, kv_bits=8)
+    dev = fs.serving_step_time(sys, cfg, 10_000, 0.0, overlap=False)
+    # host work comparable to device time: overlap wins
+    assert dse.recommend_overlap(sys, cfg, 10_000, dev)
+    # negligible host work: speedup < min_speedup, keep the simple loop
+    assert not dse.recommend_overlap(sys, cfg, 10_000, 1e-3 * dev)
+    assert not dse.recommend_overlap(sys, cfg, 10_000, 0.0)

@@ -160,3 +160,27 @@ def test_page_promote_time_and_stall_model():
         fs.kv_page_bytes(cfg, s1.kv_bits_eff) / s1.dram.bw
     assert fs.tier_stall_time(sysd, cfg, 7) == 7 * t
     assert fs.tier_stall_time(sysd, cfg, 0) == 0.0
+
+
+def test_serving_step_time_overlap_hides_host_work():
+    """Serving step model (DESIGN.md §14): the synchronous loop pays
+    device + host serially; the pipelined loop pays max of the two."""
+    import pytest
+    cfg = get_config("llama3.1-8b")
+    sysd = fs.kvnand_d(8, 8, 4, 16, kv_bits=8)
+    dev = fs.serving_step_time(sysd, cfg, 10_000, 0.0, overlap=False)
+    assert fs.serving_step_time(sysd, cfg, 10_000, 0.0, overlap=True) == dev
+    host = 3 * dev
+    sync = fs.serving_step_time(sysd, cfg, 10_000, host, overlap=False)
+    piped = fs.serving_step_time(sysd, cfg, 10_000, host, overlap=True)
+    assert sync == dev + host
+    assert piped == max(dev, host) == host      # host-bound: fully hidden
+    # speedup is sync/piped, 1.0 at either extreme, capped at 2.0 when
+    # host and device are perfectly balanced
+    assert fs.overlap_speedup(sysd, cfg, 10_000, 0.0) == 1.0
+    s = fs.overlap_speedup(sysd, cfg, 10_000, dev)
+    assert s == pytest.approx(2.0)
+    for h in (0.1 * dev, dev, 10 * dev):
+        assert 1.0 <= fs.overlap_speedup(sysd, cfg, 10_000, h) <= 2.0
+    with pytest.raises(ValueError):
+        fs.serving_step_time(sysd, cfg, 10_000, -1e-3, overlap=True)
