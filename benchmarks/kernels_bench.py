@@ -90,7 +90,7 @@ def run():
     u = jax.random.normal(kk[4], (Hw, dhw)) * 0.5
     s0 = jnp.zeros((Bw, Hw, dhw, dhw))
     for name, fn in (("recurrent", wkv_recurrent), ("chunked", wkv_chunked)):
-        jfn = jax.jit(lambda *a: fn(*a)[0])
+        jfn = jax.jit(lambda *a, fn=fn: fn(*a)[0])
         us, _ = time_fn(lambda: jax.block_until_ready(
             jfn(r, kkv, vv, lw, u, s0)))
         emit(f"kernels/wkv6_{name}_512", us, f"{Sw} tokens")

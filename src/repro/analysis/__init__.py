@@ -1,0 +1,21 @@
+"""kvlint — repo-specific static analysis (stdlib `ast` only).
+
+The rules prove, at the AST level, the correctness invariants the
+KVNAND design makes load-bearing (DESIGN.md §15):
+
+  KV001  jit purity — no host pulls / Python control flow on traced
+         values inside functions reachable from a `jax.jit` boundary
+  KV002  donation safety — a buffer passed at a `donate_argnums`
+         position is never read again by the caller
+  KV003  recompile hazards — nothing mints a second compiled signature
+         on a jitted step callable
+  KV004  pool-write discipline — every write to a cache pool leaf goes
+         through the sentinel-gated writers in `core/paged_kv.py`
+  KV005  Pallas kernel hygiene — pure index maps, declared
+         `dimension_semantics`, side-effect-free kernel bodies
+
+Run it with ``python -m repro.analysis.kvlint src tests benchmarks``.
+This package intentionally imports no third-party code (no jax): the CI
+lint job runs it on a bare interpreter.
+"""
+from repro.analysis.core import Finding, run_paths  # noqa: F401

@@ -1,0 +1,348 @@
+"""Project index + jit-boundary call graph for the kvlint rules.
+
+Name-based, flow-insensitive resolution tuned to this repo's idioms:
+
+  * plain-name calls resolve within the defining file, then through
+    explicit ``from module import name`` imports;
+  * ``alias.func(...)`` resolves through module aliases
+    (``from repro.core import paged_kv``  →  ``paged_kv.fill_layer``);
+  * ``self.method(...)`` resolves in the enclosing class first, then to
+    any same-named method project-wide (``self.engine.decode_step`` has
+    no type information — method-name matching over-approximates, which
+    is the safe direction for reachability).
+
+Jit boundaries are ``jax.jit(...)`` / ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)`` sites; each records its wrapped
+function, static/donated argument positions and — when the callable is
+bound to a name (``self._decode = jax.jit(...)``) — the binding, so the
+rules can find its call sites.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import FileCtx
+
+# aliases that are never project modules — attribute calls on these are
+# external and must not resolve by bare method name
+EXTERNAL_BASES = {
+    "jax", "jnp", "np", "numpy", "lax", "pl", "pltpu", "functools",
+    "dataclasses", "math", "os", "sys", "time", "json", "re", "ast",
+    "pytest", "hypothesis", "itertools", "collections", "asyncio",
+    "logging", "struct", "random", "string", "textwrap",
+}
+
+JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass(eq=False)   # identity hashing: one entry per def
+class FuncInfo:
+    qualname: str
+    node: ast.AST                     # FunctionDef / AsyncFunctionDef / Lambda
+    ctx: FileCtx
+    params: List[str]
+    is_method: bool
+    class_name: Optional[str]
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    @property
+    def callable_params(self) -> List[str]:
+        return self.params[1:] if self.is_method else self.params
+
+
+@dataclasses.dataclass
+class JitSite:
+    call: ast.Call
+    ctx: FileCtx
+    target: Optional[FuncInfo]
+    static_names: Set[str]
+    static_nums: Set[int]
+    donate_nums: Set[int]
+    # how the jitted callable is addressed at call sites:
+    #   ("attr", "_decode", "ContinuousBatcher") for self._decode = jit(..)
+    #   ("name", "jitted", <file rel>)           for jitted = jit(..)
+    #   ("def", "f", <file rel>)                 for @jit-decorated defs
+    bound: Optional[Tuple[str, str, str]] = None
+
+
+def _param_names(node: ast.AST) -> List[str]:
+    a = node.args
+    names = [p.arg for p in getattr(a, "posonlyargs", [])]
+    names += [p.arg for p in a.args]
+    names += [p.arg for p in a.kwonlyargs]
+    return names
+
+
+class ProjectIndex:
+    def __init__(self, ctxs: Sequence[FileCtx]):
+        self.ctxs = list(ctxs)
+        self.funcs: List[FuncInfo] = []
+        self.by_name: Dict[str, List[FuncInfo]] = {}
+        self.by_node: Dict[ast.AST, FuncInfo] = {}
+        # per-file: alias -> dotted module ("paged_kv" -> "repro.core.paged_kv")
+        self.mod_aliases: Dict[str, Dict[str, str]] = {}
+        # per-file: name -> (module, original name) from `from m import n`
+        self.from_imports: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        self.module_of: Dict[str, str] = {}      # rel path -> module name
+        self.jit_sites: List[JitSite] = []
+        for ctx in self.ctxs:
+            self._index_file(ctx)
+        for ctx in self.ctxs:
+            self._find_jit_sites(ctx)
+
+    # -- indexing ------------------------------------------------------
+    def _index_file(self, ctx: FileCtx):
+        rel = ctx.rel
+        mod = rel[:-3].replace("/", ".")
+        for prefix in ("src.",):
+            if mod.startswith(prefix):
+                mod = mod[len(prefix):]
+        if mod.endswith(".__init__"):
+            mod = mod[: -len(".__init__")]
+        self.module_of[rel] = mod
+        aliases: Dict[str, str] = {}
+        froms: Dict[str, Tuple[str, str]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for al in node.names:
+                    aliases[al.asname or al.name.split(".")[0]] = al.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for al in node.names:
+                    froms[al.asname or al.name] = (node.module, al.name)
+                    # `from repro.core import paged_kv` imports a MODULE
+                    aliases.setdefault(al.asname or al.name,
+                                       f"{node.module}.{al.name}")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_func(ctx, node)
+        self.mod_aliases[rel] = aliases
+        self.from_imports[rel] = froms
+
+    def _add_func(self, ctx: FileCtx, node: ast.AST) -> FuncInfo:
+        info = self.by_node.get(node)
+        if info is not None:
+            return info
+        qual = ctx.qualname_of(node)
+        cls = None
+        parent = ctx.parents.get(node)
+        if isinstance(parent, ast.ClassDef):
+            cls = parent.name
+        params = _param_names(node)
+        is_method = cls is not None and bool(params) \
+            and params[0] in ("self", "cls")
+        info = FuncInfo(qual, node, ctx, params, is_method, cls)
+        self.funcs.append(info)
+        self.by_node[node] = info
+        self.by_name.setdefault(info.name, []).append(info)
+        return info
+
+    def add_lambda(self, ctx: FileCtx, node: ast.Lambda) -> FuncInfo:
+        info = self.by_node.get(node)
+        if info is None:
+            info = FuncInfo(ctx.qualname_of(node), node, ctx,
+                            _param_names(node), False, None)
+            self.funcs.append(info)
+            self.by_node[node] = info
+        return info
+
+    # -- jit boundary discovery ----------------------------------------
+    def _is_jit_expr(self, node: ast.AST) -> Optional[ast.Call]:
+        """The jax.jit(...) Call for plain and functools.partial forms."""
+        if not isinstance(node, ast.Call):
+            return None
+        d = dotted(node.func)
+        if d in JIT_NAMES:
+            return node
+        if d in ("functools.partial", "partial") and node.args:
+            if dotted(node.args[0]) in JIT_NAMES:
+                return node
+        return None
+
+    def _find_jit_sites(self, ctx: FileCtx):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    site = self._decorator_site(ctx, node, dec)
+                    if site is not None:
+                        self.jit_sites.append(site)
+            call = self._is_jit_expr(node)
+            if call is None or dotted(call.func) not in JIT_NAMES:
+                continue
+            site = self._call_site(ctx, call)
+            if site is not None:
+                self.jit_sites.append(site)
+
+    def _extract_statics(self, call: ast.Call):
+        static_names: Set[str] = set()
+        static_nums: Set[int] = set()
+        donate_nums: Set[int] = set()
+        for kw in call.keywords:
+            vals: List = []
+            v = kw.value
+            if isinstance(v, (ast.Tuple, ast.List)):
+                vals = [getattr(e, "value", None) for e in v.elts]
+            elif isinstance(v, ast.Constant):
+                vals = [v.value]
+            if kw.arg == "static_argnames":
+                static_names.update(s for s in vals if isinstance(s, str))
+            elif kw.arg == "static_argnums":
+                static_nums.update(n for n in vals if isinstance(n, int))
+            elif kw.arg == "donate_argnums":
+                donate_nums.update(n for n in vals if isinstance(n, int))
+        return static_names, static_nums, donate_nums
+
+    def _decorator_site(self, ctx: FileCtx, fn: ast.AST,
+                        dec: ast.AST) -> Optional[JitSite]:
+        if dotted(dec) in JIT_NAMES:
+            info = self._add_func(ctx, fn)
+            return JitSite(None, ctx, info, set(), set(), set(),
+                           bound=("def", fn.name, ctx.rel))
+        call = self._is_jit_expr(dec)
+        if call is None:
+            return None
+        sn, si, dn = self._extract_statics(call)
+        info = self._add_func(ctx, fn)
+        return JitSite(call, ctx, info, sn, si, dn,
+                       bound=("def", fn.name, ctx.rel))
+
+    def _call_site(self, ctx: FileCtx, call: ast.Call) -> Optional[JitSite]:
+        sn, si, dn = self._extract_statics(call)
+        target: Optional[FuncInfo] = None
+        if call.args:
+            arg0 = call.args[0]
+            if isinstance(arg0, ast.Lambda):
+                target = self.add_lambda(ctx, arg0)
+            else:
+                d = dotted(arg0)
+                if d is not None:
+                    cands = self.resolve(d, ctx, scope=call)
+                    target = cands[0] if cands else None
+        bound = None
+        stmt = self.enclosing_stmt(ctx, call)
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and stmt.value is not None:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Attribute) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == "self":
+                cls = self._enclosing_class(ctx, call)
+                bound = ("attr", tgt.attr, cls or ctx.rel)
+            elif isinstance(tgt, ast.Name):
+                bound = ("name", tgt.id, ctx.rel)
+        return JitSite(call, ctx, target, sn, si, dn, bound=bound)
+
+    # -- structural helpers --------------------------------------------
+    def enclosing_stmt(self, ctx: FileCtx, node: ast.AST) -> ast.AST:
+        cur = node
+        while cur in ctx.parents and not isinstance(cur, ast.stmt):
+            cur = ctx.parents[cur]
+        return cur
+
+    def enclosing_func(self, ctx: FileCtx,
+                       node: ast.AST) -> Optional[FuncInfo]:
+        cur: Optional[ast.AST] = ctx.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return self.by_node.get(cur)
+            cur = ctx.parents.get(cur)
+        return None
+
+    def _enclosing_class(self, ctx: FileCtx,
+                         node: ast.AST) -> Optional[str]:
+        cur: Optional[ast.AST] = ctx.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur.name
+            cur = ctx.parents.get(cur)
+        return None
+
+    # -- call resolution -----------------------------------------------
+    def resolve(self, name: str, ctx: FileCtx,
+                scope: Optional[ast.AST] = None) -> List[FuncInfo]:
+        """Candidate FuncInfos for a call spelled `name` in `ctx`."""
+        parts = name.split(".")
+        last = parts[-1]
+        if len(parts) == 1:
+            local = [f for f in self.by_name.get(last, ())
+                     if f.ctx is ctx]
+            if local:
+                return local
+            imp = self.from_imports.get(ctx.rel, {}).get(last)
+            if imp is not None:
+                mod, orig = imp
+                # exact module match, or a package __init__ re-export
+                # (def lives in a submodule of the imported package)
+                return [f for f in self.by_name.get(orig, ())
+                        if (self.module_of.get(f.ctx.rel) == mod
+                            or self.module_of.get(f.ctx.rel, "")
+                            .startswith(mod + "."))
+                        and "." not in f.qualname]
+            return []
+        base = parts[0]
+        if len(parts) == 2 and base not in ("self", "cls"):
+            alias = self.mod_aliases.get(ctx.rel, {}).get(base)
+            if alias is not None:
+                hits = [f for f in self.by_name.get(last, ())
+                        if self.module_of.get(f.ctx.rel) == alias
+                        and "." not in f.qualname]
+                if hits:
+                    return hits
+            if base in EXTERNAL_BASES:
+                return []
+        if base in EXTERNAL_BASES:
+            return []
+        if base in ("self", "cls") and len(parts) == 2:
+            cls = self._enclosing_class(ctx, scope) if scope is not None \
+                else None
+            if cls is not None:
+                own = [f for f in self.by_name.get(last, ())
+                       if f.class_name == cls]
+                if own:
+                    return own
+        # attribute call on an object of unknown type: every same-named
+        # METHOD in the project (over-approximate reachability)
+        return [f for f in self.by_name.get(last, ())
+                if f.class_name is not None or base in ("self", "cls")]
+
+
+def call_candidates(index: ProjectIndex, ctx: FileCtx,
+                    call: ast.Call) -> List[FuncInfo]:
+    d = dotted(call.func)
+    if d is None:
+        return []
+    return index.resolve(d, ctx, scope=call)
+
+
+def map_args_to_params(call: ast.Call, fn: FuncInfo,
+                       via_attribute: bool) -> List[Tuple[str, ast.AST]]:
+    """(param name, arg expr) pairs for a call site; bound-method calls
+    (`obj.m(...)`) skip the receiver slot."""
+    params = fn.callable_params if (fn.is_method and via_attribute) \
+        else fn.params
+    out: List[Tuple[str, ast.AST]] = []
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            break
+        if i < len(params):
+            out.append((params[i], arg))
+    for kw in call.keywords:
+        if kw.arg is not None and kw.arg in fn.params:
+            out.append((kw.arg, kw.value))
+    return out

@@ -1,0 +1,177 @@
+"""kvlint rule engine: findings, suppressions, baseline, orchestration.
+
+Machinery only — the rules themselves live in ``rules_jit`` /
+``rules_pool`` / ``rules_pallas``.  Everything here is stdlib-only so
+the CI lint job can run without installing jax.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import zlib
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+RULES = ("KV001", "KV002", "KV003", "KV004", "KV005")
+
+_SUPPRESS_RE = re.compile(r"#\s*kvlint:\s*disable=([A-Z0-9,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source line.
+
+    ``fingerprint`` keys baseline entries: it hashes the rule, the
+    enclosing function's qualname and the *text* of the flagged line, so
+    entries survive unrelated edits that renumber lines.
+    """
+    rule: str
+    path: str          # repo-relative, forward slashes
+    line: int          # 1-indexed
+    col: int
+    message: str
+    qualname: str      # enclosing function ("<module>" at top level)
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}::{self.qualname}"
+
+    def key(self, src_line: str) -> str:
+        crc = zlib.crc32(src_line.strip().encode())
+        return f"{self.fingerprint}::{crc:08x}"
+
+
+class FileCtx:
+    """Parsed source file + per-line suppression map + parent links."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=rel)
+        self.suppressed: Dict[int, Set[str]] = self._scan_suppressions()
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+
+    def _scan_suppressions(self) -> Dict[int, Set[str]]:
+        """``# kvlint: disable=KV001[,KV002]`` suppresses its own line;
+        a standalone suppression comment suppresses the next code line."""
+        out: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            target = i
+            if text.strip().startswith("#"):      # standalone comment line
+                j = i + 1
+                while j <= len(self.lines) and (
+                        not self.lines[j - 1].strip()
+                        or self.lines[j - 1].strip().startswith("#")):
+                    j += 1
+                target = j
+            out.setdefault(target, set()).update(rules)
+        return out
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        return rule in self.suppressed.get(line, ())
+
+    def src_line(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+    def qualname_of(self, node: ast.AST) -> str:
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            elif isinstance(cur, ast.Lambda):
+                parts.append("<lambda>")
+            cur = self.parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+
+class Baseline:
+    """Grandfathered findings: ``RULE path::qualname::crc  justification``
+    per line.  A finding whose key matches an entry is reported only in
+    verbose mode and never fails the run."""
+
+    def __init__(self, path: Optional[Path]):
+        self.path = path
+        self.entries: Dict[str, str] = {}
+        if path is not None and path.exists():
+            for raw in path.read_text().splitlines():
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                fields = line.split(None, 2)
+                if len(fields) < 2:
+                    continue
+                rule, key = fields[0], fields[1]
+                note = fields[2] if len(fields) > 2 else ""
+                self.entries[f"{rule}:{key}"] = note
+
+    def matches(self, finding: Finding, src_line: str) -> bool:
+        rule_key = finding.key(src_line)
+        # stored form: "RULE path::qual::crc"
+        return f"{finding.rule}:{rule_key.split(':', 1)[1]}" in self.entries
+
+    @staticmethod
+    def format_entry(finding: Finding, src_line: str,
+                     note: str = "TODO: justify this entry") -> str:
+        key = finding.key(src_line)
+        return f"{finding.rule} {key.split(':', 1)[1]}  {note}"
+
+
+def iter_py_files(paths: Sequence[str], root: Path) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        pp = (root / p) if not Path(p).is_absolute() else Path(p)
+        if pp.is_dir():
+            files.extend(sorted(f for f in pp.rglob("*.py")
+                                if "__pycache__" not in f.parts))
+        elif pp.suffix == ".py":
+            files.append(pp)
+    return files
+
+
+def load_files(paths: Sequence[str], root: Path) -> List[FileCtx]:
+    ctxs = []
+    for f in iter_py_files(paths, root):
+        try:
+            rel = f.relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        ctxs.append(FileCtx(f, rel))
+    return ctxs
+
+
+def run_paths(paths: Sequence[str], root: Path,
+              rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Parse every .py under `paths`, run all rules, apply per-line
+    suppressions (the baseline filter is the CLI's job)."""
+    from repro.analysis import rules_jit, rules_pallas, rules_pool
+    from repro.analysis.callgraph import ProjectIndex
+
+    ctxs = load_files(paths, root)
+    index = ProjectIndex(ctxs)
+    selected = set(rules) if rules is not None else set(RULES)
+    findings: List[Finding] = []
+    if selected & {"KV001", "KV002", "KV003"}:
+        findings += rules_jit.check(index, selected)
+    if "KV004" in selected:
+        findings += rules_pool.check(index)
+    if "KV005" in selected:
+        findings += rules_pallas.check(index)
+    by_rel = {c.rel: c for c in ctxs}
+    kept = [f for f in findings
+            if not by_rel[f.path].is_suppressed(f.rule, f.line)]
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept

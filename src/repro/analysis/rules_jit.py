@@ -1,0 +1,466 @@
+"""KV001 jit purity · KV002 donation safety · KV003 recompile hazards.
+
+All three rules share the jit-boundary call graph: KV001 walks functions
+reachable from every ``jax.jit`` site with a fixpoint over which
+parameters are traced; KV002/KV003 inspect the call sites of the bound
+jitted callables themselves.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import (FuncInfo, JitSite, ProjectIndex,
+                                      call_candidates, dotted,
+                                      map_args_to_params)
+from repro.analysis.core import FileCtx, Finding
+
+# attribute reads on a traced array that are STATIC at trace time
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "at"}
+HOST_CASTS = {"float", "int", "bool"}
+NUMPY_PULLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "np.frombuffer", "onp.asarray", "onp.array"}
+
+
+def _finding(ctx: FileCtx, node: ast.AST, rule: str, msg: str) -> Finding:
+    return Finding(rule, ctx.rel, node.lineno, node.col_offset, msg,
+                   ctx.qualname_of(node))
+
+
+# ---------------------------------------------------------------------------
+# traced-parameter fixpoint
+# ---------------------------------------------------------------------------
+
+def _seed_traced(site: JitSite) -> FrozenSet[str]:
+    fn = site.target
+    assert fn is not None
+    params = fn.callable_params
+    traced = [p for i, p in enumerate(params)
+              if p not in site.static_names and i not in site.static_nums]
+    if isinstance(fn.node, ast.Lambda):
+        # `jax.jit(lambda q_, k_, quant=quant: ...)` — defaulted lambda
+        # params are the Python default-capture idiom; they hold host
+        # constants at trace time, not tracers
+        a = fn.node.args
+        captured = {p.arg for p in a.args[len(a.args) - len(a.defaults):]}
+        captured |= {p.arg for p, d in zip(a.kwonlyargs, a.kw_defaults)
+                     if d is not None}
+        traced = [p for p in traced if p not in captured]
+    return frozenset(traced)
+
+
+def _names_in(expr: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def _flow_names(index: ProjectIndex, ctx: FileCtx, expr: ast.AST,
+                ts: Set[str]) -> Set[str]:
+    """Traced names whose tracedness FLOWS through `expr` into a callee
+    argument.  Skips static accessors (`x.shape`, `len(x)`) and does not
+    descend into calls to project functions — their return tracedness is
+    unknown (e.g. `pool_page_count(cache.k_pages_g, ...)` returns a
+    static page count), so assuming untraced avoids false positives;
+    jnp/lax calls do propagate."""
+    out: Set[str] = set()
+
+    def visit(node: ast.AST):
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) and node.func.id in (
+                    "len", "isinstance", "type"):
+                return
+            d = dotted(node.func)
+            if d is not None and index.resolve(d, ctx, scope=node):
+                return
+        if isinstance(node, ast.Name) and node.id in ts:
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+def propagate_traced(index: ProjectIndex) -> Dict[FuncInfo, Set[str]]:
+    """Map every jit-reachable function to the set of its parameters that
+    can carry tracers (flow over call edges until fixpoint)."""
+    traced: Dict[FuncInfo, Set[str]] = {}
+    work: List[FuncInfo] = []
+
+    def absorb(fn: FuncInfo, names: FrozenSet[str]):
+        cur = traced.get(fn)
+        if cur is None:
+            traced[fn] = set(names)
+            work.append(fn)
+        elif not names <= cur:
+            cur |= names
+            work.append(fn)
+
+    for site in index.jit_sites:
+        if site.target is not None:
+            absorb(site.target, _seed_traced(site))
+    while work:
+        fn = work.pop()
+        ts = traced[fn]
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            for cand in call_candidates(index, fn.ctx, node):
+                via_attr = isinstance(node.func, ast.Attribute)
+                pairs = map_args_to_params(node, cand, via_attr)
+                hot = frozenset(p for p, arg in pairs
+                                if _flow_names(index, fn.ctx, arg, ts))
+                absorb(cand, hot)
+    return traced
+
+
+# ---------------------------------------------------------------------------
+# KV001 — purity inside the traced scope
+# ---------------------------------------------------------------------------
+
+def _hazard_names(expr: ast.AST, ts: Set[str]) -> Set[str]:
+    """Traced names used in `expr` in a way that concretizes them —
+    skips `len(x)`, `x.shape/.ndim/.dtype/...` and `x is None` forms,
+    all of which are static at trace time."""
+    out: Set[str] = set()
+
+    def visit(node: ast.AST):
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                and all(isinstance(c, ast.Constant) and c.value is None
+                        for c in node.comparators):
+            return
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.In, ast.NotIn)) for op in node.ops):
+            # `"patches" in batch` — pytree/dict membership is a host-
+            # level key check, static at trace time
+            return
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("len", "isinstance", "getattr",
+                                     "hasattr", "type"):
+            return
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return
+        if isinstance(node, ast.Name) and node.id in ts:
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+def _scan_purity(index: ProjectIndex, fn: FuncInfo, ts: Set[str],
+                 out: List[Finding]):
+    ctx = fn.ctx
+
+    def scan(node: ast.AST, ts: Set[str]):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not fn.node:
+            # nested function: runs at trace time; its own params shadow
+            inner = ts - set(
+                p.arg for p in list(node.args.args)
+                + list(node.args.kwonlyargs)
+                + list(getattr(node.args, "posonlyargs", [])))
+            for child in ast.iter_child_nodes(node):
+                scan(child, inner)
+            return
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                out.append(_finding(
+                    ctx, node, "KV001",
+                    "`.item()` inside a jit-traced function forces a "
+                    "host sync / fails under tracing — keep the value "
+                    "on device or hoist it to the host caller"))
+            elif d in ("jax.device_get", "device_get"):
+                out.append(_finding(
+                    ctx, node, "KV001",
+                    "`jax.device_get` inside a jit-traced function — "
+                    "device transfers belong to the host caller "
+                    "(scheduler collect())"))
+            elif d == "print":
+                out.append(_finding(
+                    ctx, node, "KV001",
+                    "`print` inside a jit-traced function runs once at "
+                    "trace time (or not at all) — use jax.debug.print "
+                    "or remove"))
+            elif d in NUMPY_PULLS and any(
+                    _hazard_names(a, ts) for a in node.args):
+                out.append(_finding(
+                    ctx, node, "KV001",
+                    f"`{d}` on a traced value materializes it on the "
+                    "host (TracerArrayConversionError at best) — use "
+                    "jnp instead"))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in HOST_CASTS and node.args and any(
+                    _hazard_names(a, ts) for a in node.args):
+                out.append(_finding(
+                    ctx, node, "KV001",
+                    f"`{node.func.id}()` on a traced value concretizes "
+                    "it — keep the computation in jnp or mark the "
+                    "argument static"))
+        elif isinstance(node, (ast.If, ast.While)):
+            bad = _hazard_names(node.test, ts)
+            if bad:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                out.append(_finding(
+                    ctx, node, "KV001",
+                    f"Python `{kind}` on traced value(s) "
+                    f"{sorted(bad)} — branch at trace time is a "
+                    "TracerBoolConversionError; use lax.cond/select "
+                    "or make the argument static"))
+        for child in ast.iter_child_nodes(node):
+            scan(child, ts)
+
+    body = fn.node.body if isinstance(fn.node.body, list) \
+        else [fn.node.body]
+    for stmt in body:
+        scan(stmt, ts)
+
+
+# ---------------------------------------------------------------------------
+# KV002 — donated buffers are dead after the call
+# ---------------------------------------------------------------------------
+
+def _symbol_of(expr: ast.AST) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        return expr.id
+    d = dotted(expr)
+    if d is not None and d.count(".") == 1 and d.startswith("self."):
+        return d
+    return None
+
+
+def _targets_of(stmt: ast.AST) -> Set[str]:
+    """Symbols (re)bound by an assignment statement."""
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For)):
+        targets = [stmt.target]
+    flat: List[ast.AST] = []
+    while targets:
+        t = targets.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            targets.extend(t.elts)
+        else:
+            flat.append(t)
+    for t in flat:
+        s = _symbol_of(t)
+        if s is not None:
+            out.add(s)
+    return out
+
+
+def _loads_in(node: ast.AST, symbol: str) -> List[ast.AST]:
+    hits = []
+    for n in ast.walk(node):
+        if symbol.startswith("self."):
+            if isinstance(n, ast.Attribute) \
+                    and isinstance(n.ctx, ast.Load) \
+                    and isinstance(n.value, ast.Name) \
+                    and n.value.id == "self" \
+                    and n.attr == symbol.split(".", 1)[1]:
+                hits.append(n)
+        elif isinstance(n, ast.Name) and n.id == symbol \
+                and isinstance(n.ctx, ast.Load):
+            hits.append(n)
+    return hits
+
+
+def _stmt_sequence_after(ctx: FileCtx, stmt: ast.AST,
+                         stop: ast.AST) -> List[Tuple[str, ast.AST]]:
+    """Statements that may execute after `stmt` inside `stop` (the
+    enclosing function): later siblings at each nesting level walking
+    outward, plus a loop re-entry pass for enclosing loops."""
+    seq: List[Tuple[str, ast.AST]] = []
+    child = stmt
+    parent = ctx.parents.get(child)
+    while parent is not None and child is not stop:
+        for field in ("body", "orelse", "finalbody"):
+            block = getattr(parent, field, None)
+            if isinstance(block, list) and child in block:
+                idx = block.index(child)
+                for later in block[idx + 1:]:
+                    seq.append(("after", later))
+                if isinstance(parent, (ast.For, ast.While)) \
+                        and field == "body":
+                    for earlier in block[:idx + 1]:
+                        seq.append(("reentry", earlier))
+        child = parent
+        parent = ctx.parents.get(child)
+    return seq
+
+
+def _check_donated_call(index: ProjectIndex, ctx: FileCtx, call: ast.Call,
+                        site: JitSite, out: List[Finding]):
+    fn = index.enclosing_func(ctx, call)
+    if fn is None:
+        return
+    stmt = index.enclosing_stmt(ctx, call)
+    rebound_here = _targets_of(stmt)
+    for d in sorted(site.donate_nums):
+        if d >= len(call.args):
+            continue
+        sym = _symbol_of(call.args[d])
+        if sym is None or sym in rebound_here:
+            continue                    # unpacked/rebound by this very stmt
+        for phase, later in _stmt_sequence_after(ctx, stmt, fn.node):
+            if phase == "reentry" and later is stmt:
+                break                   # back at the call: next donation
+            loads = _loads_in(later, sym)
+            if loads:
+                out.append(_finding(
+                    ctx, loads[0], "KV002",
+                    f"`{sym}` was donated (donate_argnums={d}) to the "
+                    f"jitted callable at line {call.lineno} and read "
+                    "again here — the buffer may already be aliased/"
+                    "freed; rebind the result instead"))
+                break
+            if sym in _targets_of(later):
+                break                   # rebound before any further read
+
+
+# ---------------------------------------------------------------------------
+# KV003 — one compiled signature per step callable
+# ---------------------------------------------------------------------------
+
+def _enclosing_loop(ctx: FileCtx, node: ast.AST) -> Optional[ast.AST]:
+    cur = ctx.parents.get(node)
+    while cur is not None and not isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        if isinstance(cur, (ast.For, ast.While)):
+            return cur
+        cur = ctx.parents.get(cur)
+    return None
+
+
+def _is_pylit(expr: ast.AST) -> bool:
+    if isinstance(expr, ast.Constant) \
+            and isinstance(expr.value, (int, float, bool)):
+        return True
+    return isinstance(expr, ast.UnaryOp) \
+        and isinstance(expr.op, ast.USub) \
+        and isinstance(expr.operand, ast.Constant)
+
+
+def _bound_call_sites(index: ProjectIndex,
+                      site: JitSite) -> List[Tuple[FileCtx, ast.Call]]:
+    kind, name, where = site.bound
+    hits: List[Tuple[FileCtx, ast.Call]] = []
+    for ctx in index.ctxs:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if kind == "attr":
+                if isinstance(f, ast.Attribute) and f.attr == name:
+                    hits.append((ctx, node))
+            elif isinstance(f, ast.Name) and f.id == name \
+                    and ctx.rel == where:
+                hits.append((ctx, node))
+    return hits
+
+
+def _check_recompile(index: ProjectIndex, site: JitSite,
+                     out: List[Finding]):
+    # (a) jit() minted inside a loop over a loop-invariant function
+    if site.call is not None:
+        loop = _enclosing_loop(site.ctx, site.call)
+        if loop is not None and site.target is not None \
+                and site.target.node.lineno < loop.lineno:
+            out.append(_finding(
+                site.ctx, site.call, "KV003",
+                f"`jax.jit({site.target.name})` inside a loop mints a "
+                "fresh callable (and a fresh compile cache) every "
+                "iteration — hoist the jit out of the loop"))
+    # (b) mixed Python-literal / array kinds at one traced position
+    if site.bound is None:
+        return
+    sites = _bound_call_sites(index, site)
+    if len(sites) < 2:
+        return
+    n_pos = max(len(c.args) for _, c in sites)
+    for pos in range(n_pos):
+        if pos in site.static_nums:
+            continue
+        kinds = []
+        for ctx, call in sites:
+            if pos < len(call.args):
+                kinds.append((ctx, call, _is_pylit(call.args[pos])))
+        lits = [t for t in kinds if t[2]]
+        if lits and any(not t[2] for t in kinds):
+            for ctx, call, _ in lits:
+                out.append(_finding(
+                    ctx, call.args[pos], "KV003",
+                    f"Python scalar at traced position {pos} of jitted "
+                    f"`{site.bound[1]}` while other call sites pass "
+                    "arrays — the weak-typed scalar mints a second "
+                    "compiled signature; pass a jnp array of the "
+                    "step dtype"))
+
+
+def _check_static_stability(index: ProjectIndex, site: JitSite,
+                            out: List[Finding]):
+    """static_argnames fed per-call-varying locals recompile per value."""
+    if not site.static_names or site.bound is None \
+            or site.target is None:
+        return
+    for ctx, call in _bound_call_sites(index, site):
+        caller = index.enclosing_func(ctx, call)
+        if caller is None:
+            continue
+        local_names = set(caller.params) - {"self", "cls"}
+        for node in ast.walk(caller.node):
+            if isinstance(node, ast.Assign):
+                local_names |= _targets_of(node) | {
+                    t.id for t in ast.walk(node)
+                    if isinstance(t, ast.Name)
+                    and isinstance(t.ctx, ast.Store)}
+        pairs = map_args_to_params(call, site.target, False)
+        for pname, arg in pairs:
+            if pname not in site.static_names:
+                continue
+            risky = {n for n in _names_in(arg)
+                     if n in local_names}
+            if risky:
+                out.append(_finding(
+                    ctx, arg, "KV003",
+                    f"static argument `{pname}` of jitted "
+                    f"`{site.bound[1]}` is fed per-call-varying "
+                    f"value(s) {sorted(risky)} — every distinct value "
+                    "compiles a new signature; keep statics "
+                    "config-derived or make the argument traced"))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def check(index: ProjectIndex, selected: Set[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    if "KV001" in selected:
+        purity: List[Finding] = []
+        for fn, ts in propagate_traced(index).items():
+            _scan_purity(index, fn, ts, purity)
+        seen = set()
+        for f in purity:
+            k = (f.path, f.line, f.col, f.message)
+            if k not in seen:
+                seen.add(k)
+                findings.append(f)
+    if "KV002" in selected:
+        for site in index.jit_sites:
+            if not site.donate_nums or site.bound is None:
+                continue
+            for ctx, call in _bound_call_sites(index, site):
+                _check_donated_call(index, ctx, call, site, findings)
+    if "KV003" in selected:
+        for site in index.jit_sites:
+            _check_recompile(index, site, findings)
+            _check_static_stability(index, site, findings)
+    return findings

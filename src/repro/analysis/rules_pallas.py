@@ -1,0 +1,195 @@
+"""KV005 — Pallas kernel hygiene (files under ``kernels/``).
+
+Three checks per ``pl.pallas_call`` site:
+
+  * BlockSpec index maps must be pure functions of the grid indices
+    (plus scalar-prefetch refs): closing over a parameter of the
+    enclosing op function may capture a TRACED array — block addressing
+    then silently depends on runtime data;
+  * every multi-axis grid declares ``dimension_semantics`` (the
+    parallel/arbitrary split is what lets the scratch-carrying page walk
+    stay sequential while heads/partitions parallelize);
+  * kernel bodies stay side-effect free: no ``print``/``open``, no host
+    numpy — Refs in, Refs out.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.callgraph import ProjectIndex, dotted
+from repro.analysis.core import FileCtx, Finding
+
+_GRID_SPEC_NAMES = {"pltpu.PrefetchScalarGridSpec", "PrefetchScalarGridSpec",
+                    "pl.GridSpec", "GridSpec"}
+
+
+def _enclosing_fn(ctx: FileCtx, node: ast.AST) -> Optional[ast.AST]:
+    cur = ctx.parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = ctx.parents.get(cur)
+    return None
+
+
+def _fn_params(fn: Optional[ast.AST]) -> Set[str]:
+    if fn is None:
+        return set()
+    a = fn.args
+    return {p.arg for p in list(a.args) + list(a.kwonlyargs)
+            + list(getattr(a, "posonlyargs", []))}
+
+
+def _lambda_free_names(lam: ast.Lambda) -> Set[str]:
+    bound = {p.arg for p in list(lam.args.args)
+             + list(lam.args.kwonlyargs)
+             + list(getattr(lam.args, "posonlyargs", []))}
+    if lam.args.vararg:
+        bound.add(lam.args.vararg.arg)
+    if lam.args.kwarg:
+        bound.add(lam.args.kwarg.arg)
+    return {n.id for n in ast.walk(lam.body)
+            if isinstance(n, ast.Name)} - bound
+
+
+def _tuple_lens(ctx: FileCtx, fn: Optional[ast.AST],
+                expr: ast.AST) -> List[int]:
+    """Possible lengths of a grid expression (tuple literals, following
+    one level of local Name assignment)."""
+    if isinstance(expr, ast.Tuple):
+        return [len(expr.elts)]
+    lens: List[int] = []
+    if isinstance(expr, ast.Name) and fn is not None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == expr.id
+                    for t in node.targets) \
+                    and isinstance(node.value, ast.Tuple):
+                lens.append(len(node.value.elts))
+    return lens
+
+
+def _index_map_lambdas(ctx: FileCtx, fn: ast.AST) -> List[ast.Lambda]:
+    """Lambdas appearing inside BlockSpec(...) calls within `fn`."""
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and (dotted(node.func) or "") \
+                .endswith("BlockSpec"):
+            for sub in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(sub, ast.Lambda):
+                    out.append(sub)
+    return out
+
+
+def _kernel_body(ctx: FileCtx, index: ProjectIndex, fn: Optional[ast.AST],
+                 expr: ast.AST) -> Optional[ast.AST]:
+    """Resolve pallas_call's first argument to the kernel body def,
+    following `kernel = functools.partial(_body, ...)` locals."""
+    if isinstance(expr, ast.Name) and fn is not None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == expr.id
+                    for t in node.targets):
+                v = node.value
+                if isinstance(v, ast.Call) and (dotted(v.func) or "") in (
+                        "functools.partial", "partial") and v.args:
+                    expr = v.args[0]
+                break
+    d = dotted(expr)
+    if d is None:
+        return None
+    cands = index.resolve(d, ctx)
+    return cands[0].node if cands else None
+
+
+def _scan_body_effects(ctx: FileCtx, body: ast.AST, out: List[Finding]):
+    for node in ast.walk(body):
+        bad = None
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d in ("print", "open"):
+                bad = f"`{d}()`"
+        elif isinstance(node, ast.Name) and node.id in ("np", "numpy"):
+            bad = f"host numpy (`{node.id}.`)"
+        if bad is not None:
+            out.append(Finding(
+                "KV005", ctx.rel, node.lineno, node.col_offset,
+                f"{bad} inside a Pallas kernel body — kernel bodies "
+                "must be side-effect free (Refs in, Refs out; use "
+                "jnp/lax/pl primitives only)",
+                ctx.qualname_of(node)))
+
+
+def check(index: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    scanned_bodies = set()
+    for ctx in index.ctxs:
+        if "kernels/" not in ctx.rel:
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) \
+                    or (dotted(node.func) or "") \
+                    .rsplit(".", 1)[-1] != "pallas_call":
+                continue
+            fn = _enclosing_fn(ctx, node)
+            params = _fn_params(fn)
+
+            # 1. index-map purity over every BlockSpec in this op
+            if fn is not None:
+                for lam in _index_map_lambdas(ctx, fn):
+                    captured = sorted(_lambda_free_names(lam) & params)
+                    if captured:
+                        out.append(Finding(
+                            "KV005", ctx.rel, lam.lineno, lam.col_offset,
+                            f"BlockSpec index map closes over enclosing "
+                            f"parameter(s) {captured} — index maps must "
+                            "be pure functions of grid indices (and "
+                            "scalar-prefetch refs); route runtime data "
+                            "through scalar prefetch instead",
+                            ctx.qualname_of(lam)))
+
+            # 2. dimension_semantics on multi-axis grids
+            grid_expr = None
+            kwsrc: List[ast.AST] = [node]
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    grid_expr = kw.value
+                elif kw.arg == "grid_spec":
+                    gs = kw.value
+                    if isinstance(gs, ast.Name) and fn is not None:
+                        for n2 in ast.walk(fn):
+                            if isinstance(n2, ast.Assign) and any(
+                                    isinstance(t, ast.Name)
+                                    and t.id == gs.id
+                                    for t in n2.targets):
+                                gs = n2.value
+                                break
+                    if isinstance(gs, ast.Call) and (dotted(gs.func) or "") \
+                            in _GRID_SPEC_NAMES:
+                        kwsrc.append(gs)
+                        for kw2 in gs.keywords:
+                            if kw2.arg == "grid":
+                                grid_expr = kw2.value
+            if grid_expr is not None:
+                lens = _tuple_lens(ctx, fn, grid_expr)
+                has_sem = any(
+                    isinstance(n2, ast.keyword)
+                    and n2.arg == "dimension_semantics"
+                    for src in kwsrc for n2 in ast.walk(src))
+                if lens and max(lens) > 1 and not has_sem:
+                    out.append(Finding(
+                        "KV005", ctx.rel, node.lineno, node.col_offset,
+                        f"pallas_call with a {max(lens)}-axis grid and "
+                        "no `dimension_semantics` — declare the "
+                        "parallel/arbitrary split (compiler_params=...) "
+                        "so the sequential scratch walk is explicit",
+                        ctx.qualname_of(node)))
+
+            # 3. kernel-body purity
+            if node.args:
+                body = _kernel_body(ctx, index, fn, node.args[0])
+                if body is not None and id(body) not in scanned_bodies:
+                    scanned_bodies.add(id(body))
+                    _scan_body_effects(ctx, body, out)
+    return out

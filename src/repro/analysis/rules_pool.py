@@ -1,0 +1,129 @@
+"""KV004 — pool-write discipline.
+
+Every write into a shared/striped KV pool leaf must go through the
+sentinel-gated writer family in ``core/paged_kv.py`` (drop-sentinel
+gating is what makes accept-gated span appends, chunk fills and COW
+copies safe against stale/padding occupants — DESIGN.md §9/§11).  Any
+direct ``leaf.at[...].set/add`` or ``dynamic_update_slice(leaf, ...)``
+on a pool leaf in any other module is an error.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.callgraph import ProjectIndex, dotted
+from repro.analysis.core import FileCtx, Finding
+
+# the KV pool data / scale / page-table leaves of DecodeCache (ring
+# position rows `page_pos_w` and `lengths` are engine-owned metadata,
+# not KV bytes, and stay out of scope)
+POOL_LEAVES = {
+    "k_pages", "v_pages", "k_scale", "v_scale",
+    "k_pages_g", "v_pages_g", "k_scale_g", "v_scale_g",
+    "k_pages_w", "v_pages_w", "k_scale_w", "v_scale_w",
+    "page_table_g", "page_table_w",
+}
+# parameter names that conventionally carry a pool leaf in this repo
+POOLISH_PARAMS = {"pool", "pools", "k_pages", "v_pages", "cache"}
+ALLOWED_FILES = ("core/paged_kv.py",)
+
+_DUS_NAMES = {"jax.lax.dynamic_update_slice", "lax.dynamic_update_slice",
+              "dynamic_update_slice",
+              "jax.lax.dynamic_update_slice_in_dim",
+              "lax.dynamic_update_slice_in_dim"}
+
+
+def _leafish(ctx: FileCtx, index: ProjectIndex, expr: ast.AST,
+             fn_node: Optional[ast.AST]) -> Optional[str]:
+    """Why `expr` denotes a pool leaf, or None.
+
+    Catches: `cache.k_pages_g`, a local assigned from such an attribute,
+    a local assigned from `getattr(cache_like, ...)` (the generic
+    all-leaf writer idiom), and parameters named like a pool.
+    """
+    if isinstance(expr, ast.Attribute) and expr.attr in POOL_LEAVES:
+        return f"cache leaf `.{expr.attr}`"
+    if isinstance(expr, ast.Name):
+        if fn_node is not None:
+            args = fn_node.args
+            params = {p.arg for p in list(args.args)
+                      + list(args.kwonlyargs)
+                      + list(getattr(args, "posonlyargs", []))}
+            if expr.id in params and expr.id in POOLISH_PARAMS:
+                return f"pool-carrying parameter `{expr.id}`"
+            scope = fn_node
+        else:
+            scope = ctx.tree
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Assign):
+                continue
+            stores = {t.id for tgt in node.targets
+                      for t in ast.walk(tgt)
+                      if isinstance(t, ast.Name)
+                      and isinstance(t.ctx, ast.Store)}
+            if expr.id not in stores:
+                continue
+            for v in ast.walk(node.value):
+                if isinstance(v, ast.Attribute) and v.attr in POOL_LEAVES:
+                    return (f"local `{expr.id}` bound from cache leaf "
+                            f"`.{v.attr}`")
+                if isinstance(v, ast.Call) \
+                        and dotted(v.func) == "getattr" and v.args:
+                    base = dotted(v.args[0]) or ""
+                    if base in ("cache", "c", "cur", "one", "self.cache",
+                                "pool"):
+                        return (f"local `{expr.id}` bound from "
+                                f"getattr({base}, ...) over cache leaves")
+    return None
+
+
+def _enclosing_fn_node(ctx: FileCtx, node: ast.AST) -> Optional[ast.AST]:
+    cur = ctx.parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return cur
+        cur = ctx.parents.get(cur)
+    return None
+
+
+def check(index: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    cache: Dict[int, Optional[str]] = {}
+    for ctx in index.ctxs:
+        if ctx.rel.endswith(ALLOWED_FILES):
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            base = why = None
+            kind = None
+            f = node.func
+            # leaf.at[...].set(...) / .add(...)
+            if isinstance(f, ast.Attribute) and f.attr in ("set", "add") \
+                    and isinstance(f.value, ast.Subscript) \
+                    and isinstance(f.value.value, ast.Attribute) \
+                    and f.value.value.attr == "at":
+                base = f.value.value.value
+                kind = f".at[...].{f.attr}"
+            elif dotted(f) in _DUS_NAMES and node.args:
+                base = node.args[0]
+                kind = "dynamic_update_slice"
+            if base is None:
+                continue
+            key = id(base)
+            if key not in cache:
+                cache[key] = _leafish(ctx, index, base,
+                                      _enclosing_fn_node(ctx, node))
+            why = cache[key]
+            if why is None:
+                continue
+            out.append(Finding(
+                "KV004", ctx.rel, node.lineno, node.col_offset,
+                f"direct {kind} on {why} outside core/paged_kv.py — "
+                "every KV pool write must go through the sentinel-gated "
+                "writers (append_*/fill_*/span/copy_page/stage/splice) "
+                "so drop-gating and requant chains stay intact",
+                ctx.qualname_of(node)))
+    return out

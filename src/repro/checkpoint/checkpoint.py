@@ -145,7 +145,7 @@ def restore_checkpoint(ckpt_dir: str, step: int, like,
 
     flat_like = _flatten_with_paths_structure(like)
     out_leaves = {}
-    for key, leaf in flat_like.items():
+    for key in flat_like:
         if key.endswith(SEP + "__none__"):
             continue
         arr = data[key]

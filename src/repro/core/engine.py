@@ -191,24 +191,13 @@ class KVNANDEngine:
     # in-place pool ops (pools carried through the layer scan)
     # ------------------------------------------------------------------
     def _append_token(self, pool, layer, phys, slot, val):
-        """pool: [L, B, K, NP, T, dh]; write one token's K or V in place.
-
-        Uniform-length fast path: all sequences advance in lockstep (static
-        decode batching — every dry-run cell), so the append is ONE
-        dynamic_update_slice.  The general per-sequence path lowers to a
-        scatter, which XLA implements with whole-pool layout transposes
-        (measured 3× pool traffic per layer) — only the ragged continuous-
-        batching scheduler pays it.
-        """
-        if self.eng.uniform_lengths:
-            upd = val[None, :, :, None, None, :].astype(pool.dtype)
-            zero = jnp.zeros((), jnp.int32)
-            return jax.lax.dynamic_update_slice(
-                pool, upd, (layer, zero, zero, phys[0], slot[0], zero))
-        B = val.shape[0]
-        b_idx = jnp.arange(B)
-        return pool.at[layer, b_idx, :, phys, slot].set(
-            val.astype(pool.dtype), mode="drop")
+        """pool: [L, B, K, NP, T, dh]; write one token's K or V in place
+        through the `paged_kv` writer family (KV004: pool-leaf writes live
+        in core/paged_kv.py; see its docstring for the uniform-lengths
+        fast-path rationale)."""
+        return paged_kv.append_token_inplace(
+            pool, layer, phys, slot, val,
+            uniform_lengths=self.eng.uniform_lengths)
 
     @staticmethod
     def _layer_slice(pool, layer):
@@ -550,7 +539,7 @@ class KVNANDEngine:
         def group_body(carry, xs):
             xc, pools, states = carry
             for j, is_glob in enumerate(self.pattern):
-                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                pl_ = jax.tree.map(lambda a, j=j: a[j], xs["p"])
                 out, pools = self._decode_block(
                     pl_, xc, pools, states, cross,
                     xs["l0"] + j, xs["g0"] + self._g_off[j],
@@ -711,7 +700,7 @@ class KVNANDEngine:
         def fwd_body(xc, xs):
             kv_k, kv_v = [], []
             for j, is_glob in enumerate(self.pattern):
-                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                pl_ = jax.tree.map(lambda a, j=j: a[j], xs["p"])
                 xc, k, v = attn_layer(pl_, xc, xs["g0"] + self._g_off[j],
                                       xs["w0"] + self._w_off[j], is_glob)
                 kv_k.append(k)
@@ -892,7 +881,7 @@ class KVNANDEngine:
         def group_body(carry, xs):
             xc, pools, states, cross_c = carry
             for j, is_glob in enumerate(self.pattern):
-                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                pl_ = jax.tree.map(lambda a, j=j: a[j], xs["p"])
                 xc, pools, states, cross_c = self._prefill_block(
                     pl_, xc, positions, enc_out, is_glob, pools, states,
                     cross_c, xs["l0"] + j, xs["g0"] + self._g_off[j],
@@ -1159,7 +1148,7 @@ class KVNANDEngine:
         def group_body(carry, xs):
             xc, pools, states = carry
             for j, is_glob in enumerate(self.pattern):
-                pl_ = jax.tree.map(lambda a: a[j], xs["p"])
+                pl_ = jax.tree.map(lambda a, j=j: a[j], xs["p"])
                 xc, pools, states = self._chunk_block(
                     pl_, xc, positions, is_glob, pools, states,
                     xs["l0"] + j, xs["g0"] + self._g_off[j],

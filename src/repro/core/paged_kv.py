@@ -902,3 +902,88 @@ def copy_page_shared(pool, src, dst):
         pool, (0, 0, jnp.asarray(src, jnp.int32)) + zeros, (L, K, 1) + tail)
     return jax.lax.dynamic_update_slice(
         pool, page, (0, 0, jnp.asarray(dst, jnp.int32)) + zeros)
+
+
+# ---------------------------------------------------------------------------
+# Host-staging / slot-splice writers (every pool-leaf write lives here:
+# kvlint rule KV004 rejects direct .at[].set / dynamic_update_slice on
+# cache pool leaves anywhere outside this module — DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def append_token_inplace(pool, layer, phys, slot, val, *,
+                         uniform_lengths: bool = False):
+    """pool: [L, B, K, NP, T, dh]; write one token's K or V in place.
+
+    Uniform-length fast path: all sequences advance in lockstep (static
+    decode batching — every dry-run cell), so the append is ONE
+    dynamic_update_slice.  The general per-sequence path lowers to a
+    scatter, which XLA implements with whole-pool layout transposes
+    (measured 3× pool traffic per layer) — only the ragged continuous-
+    batching scheduler pays it.
+    """
+    if uniform_lengths:
+        upd = val[None, :, :, None, None, :].astype(pool.dtype)
+        zero = jnp.zeros((), jnp.int32)
+        return jax.lax.dynamic_update_slice(
+            pool, upd, (layer, zero, zero, phys[0], slot[0], zero))
+    B = val.shape[0]
+    b_idx = jnp.arange(B)
+    return pool.at[layer, b_idx, :, phys, slot].set(
+        val.astype(pool.dtype), mode="drop")
+
+
+def stage_hot_slot(cache: "DecodeCache", slot, vals) -> "DecodeCache":
+    """Tiered staging (DESIGN.md §13): write a promoted page's bytes into
+    its freshly bound hot slot — one dynamic_update_slice per pool leaf
+    named in `vals` ({leaf name: [L, K, T, dh] host bytes}).  Jit with a
+    donated `cache` so the upload lands in place."""
+    upd = {}
+    for name, val in vals.items():
+        leaf = getattr(cache, name)
+        v = jnp.expand_dims(val, 2).astype(leaf.dtype)
+        start = tuple(slot if d == 2 else 0 for d in range(leaf.ndim))
+        upd[name] = jax.lax.dynamic_update_slice(leaf, v, start)
+    return dataclasses.replace(cache, **upd)
+
+
+# leaves whose batch axis is axis 0 (tables / ring positions / lengths);
+# pool data leaves carry the stacked-layer axis first
+_BATCH_AXIS0 = ("page_table_g", "page_table_w", "page_pos_w", "lengths")
+
+
+def splice_slot(cache: "DecodeCache", one: "DecodeCache",
+                i) -> "DecodeCache":
+    """Copy sequence 0 of a B=1 cache into slot i of the batch cache.
+
+    One `dynamic_update_slice` per leaf: `one` already has a size-1 batch
+    dim, so the update writes exactly the slot's stripe.  Jit this with a
+    donated `cache` so XLA updates the pools in place instead of copying
+    the whole pool per admit.
+    """
+    updates = {}
+    for f in dataclasses.fields(cache):
+        cur, new = getattr(cache, f.name), getattr(one, f.name)
+        if cur is None:
+            continue
+        # batch axis position: leaf layouts are [L, B, ...] or [B, ...]
+        ax = 0 if f.name in _BATCH_AXIS0 else 1
+        start = tuple(jnp.asarray(i if d == ax else 0, jnp.int32)
+                      for d in range(cur.ndim))
+        updates[f.name] = jax.lax.dynamic_update_slice(
+            cur, new.astype(cur.dtype), start)
+    return dataclasses.replace(cache, **updates)
+
+
+def splice_slot_ref(cache: "DecodeCache", one: "DecodeCache",
+                    i: int) -> "DecodeCache":
+    """Eager reference splice (the old O(pool) path) — kept for tests."""
+    updates = {}
+    for f in dataclasses.fields(cache):
+        cur, new = getattr(cache, f.name), getattr(one, f.name)
+        if cur is None:
+            continue
+        if f.name in _BATCH_AXIS0:
+            updates[f.name] = cur.at[i].set(new[0])
+        else:
+            updates[f.name] = cur.at[:, i].set(new[:, 0])
+    return dataclasses.replace(cache, **updates)

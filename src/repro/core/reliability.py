@@ -18,7 +18,7 @@ and retires blocks at the read-disturb limit (trading spare capacity).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -94,9 +94,11 @@ def pgrd_reduction_factors(cfg: ModelConfig, sys: SystemConfig,
 
 def lifetime_pe_cycles(cfg: ModelConfig, *, tok_per_s: float = 3.0,
                        years: float = 5.0, abits: int = 16,
-                       n_dies: int = 8, die: FlashDie = FlashDie()
+                       n_dies: int = 8, die: Optional[FlashDie] = None
                        ) -> Dict[str, float]:
     """§V-D endurance check: total KV written over the device lifetime."""
+    if die is None:
+        die = FlashDie()
     seconds = years * 365 * 24 * 3600
     kv_per_tok = 2 * cfg.n_layers * cfg.kv_dim * abits / 8
     total_bytes = kv_per_tok * tok_per_s * seconds

@@ -192,7 +192,7 @@ class CostSummary:
 
 def _dot_flops(op: Op, symtab) -> float:
     res_elems = 0.0
-    for dt, shape in op.result_shapes:
+    for _dt, shape in op.result_shapes:
         n = 1
         for d in shape:
             n *= d

@@ -135,6 +135,19 @@ from repro.serving.sampler import (SamplingParams, request_keys,
 
 MIN_PROMPT_BUCKET = 16
 
+# One-compiled-signature invariant (DESIGN.md §10/§15): when the test
+# suite points this at a list, every batcher registers its decode/verify
+# jitted callables here and tests/conftest.py asserts `_cache_size() <= 1`
+# after each test — a silent recompile (second traced signature) fails
+# the test that triggered it.  `None` (the default) keeps production
+# servers free of the bookkeeping.
+JIT_WATCH = None
+
+
+def _watch_jit(name: str, fn) -> None:
+    if JIT_WATCH is not None and fn is not None:
+        JIT_WATCH.append((name, fn))
+
 
 @functools.partial(jax.jit, static_argnames=("true_vocab",))
 def _sample_one(lg, seeds, pos, t, k, p, *, true_vocab):
@@ -337,6 +350,8 @@ class ContinuousBatcher:
 
         self._verify = (jax.jit(_verify_fn, donate_argnums=(1,))
                         if speculation_k > 0 else None)
+        _watch_jit(f"{type(self).__name__}._decode", self._decode)
+        _watch_jit(f"{type(self).__name__}._verify", self._verify)
         self._chunk_first = jax.jit(
             lambda p, c, t, s, st, n: self.engine.prefill_chunk(
                 p, c, {"tokens": t}, s, st, n, first=True),
@@ -434,22 +449,13 @@ class ContinuousBatcher:
 
         # tiered staging: one donated dynamic_update_slice per pool leaf
         # writes a promoted page's bytes into its freshly bound hot slot
-        # (the jax.device_put-style upload of DESIGN.md §13)
+        # (the jax.device_put-style upload of DESIGN.md §13); the writer
+        # itself lives with the rest of the pool-leaf writers (KV004)
         self._pool_leaves = [n for n in ("k_pages_g", "v_pages_g",
                                          "k_scale_g", "v_scale_g")
                              if getattr(c, n) is not None]
-
-        def stage_in(cache, slot, vals):
-            upd = {}
-            for name, val in vals.items():
-                leaf = getattr(cache, name)
-                v = jnp.expand_dims(val, 2).astype(leaf.dtype)
-                start = tuple(slot if d == 2 else 0
-                              for d in range(leaf.ndim))
-                upd[name] = jax.lax.dynamic_update_slice(leaf, v, start)
-            return dataclasses.replace(cache, **upd)
-
-        self._stage_jit = jax.jit(stage_in, donate_argnums=(0,))
+        self._stage_jit = jax.jit(paged_kv.stage_hot_slot,
+                                  donate_argnums=(0,))
 
     # -- tiered flash KV hierarchy (DESIGN.md §13) ---------------------
     def _read_hot(self, slot: int) -> Dict[str, np.ndarray]:
@@ -1396,40 +1402,8 @@ class SpliceBatcher(ContinuousBatcher):
         return decoded
 
 
-_BATCH_AXIS0 = ("page_table_g", "page_table_w", "page_pos_w", "lengths")
-
-
-def _splice_slot(cache, one, i):
-    """Copy sequence 0 of a B=1 cache into slot i of the batch cache.
-
-    One `dynamic_update_slice` per leaf: `one` already has a size-1 batch
-    dim, so the update writes exactly the slot's stripe.  Jit this with a
-    donated `cache` so XLA updates the pools in place instead of copying
-    the whole pool per admit.
-    """
-    updates = {}
-    for f in dataclasses.fields(cache):
-        cur, new = getattr(cache, f.name), getattr(one, f.name)
-        if cur is None:
-            continue
-        # batch axis position: leaf layouts are [L, B, ...] or [B, ...]
-        ax = 0 if f.name in _BATCH_AXIS0 else 1
-        start = tuple(jnp.asarray(i if d == ax else 0, jnp.int32)
-                      for d in range(cur.ndim))
-        updates[f.name] = jax.lax.dynamic_update_slice(
-            cur, new.astype(cur.dtype), start)
-    return dataclasses.replace(cache, **updates)
-
-
-def _splice_slot_ref(cache, one, i: int):
-    """Eager reference splice (the old O(pool) path) — kept for tests."""
-    updates = {}
-    for f in dataclasses.fields(cache):
-        cur, new = getattr(cache, f.name), getattr(one, f.name)
-        if cur is None:
-            continue
-        if f.name in _BATCH_AXIS0:
-            updates[f.name] = cur.at[i].set(new[0])
-        else:
-            updates[f.name] = cur.at[:, i].set(new[:, 0])
-    return dataclasses.replace(cache, **updates)
+# module-level aliases so tests can monkeypatch `sched._splice_slot`
+# (the writers themselves live with the pool-leaf writer family in
+# core/paged_kv.py — KV004 discipline, DESIGN.md §15)
+_splice_slot = paged_kv.splice_slot
+_splice_slot_ref = paged_kv.splice_slot_ref

@@ -1,0 +1,35 @@
+"""Jit-cache guard: detect silent recompilation of step callables.
+
+`repro.serving.scheduler` registers each batcher's `_decode`/`_verify`
+callable on the module-level ``JIT_WATCH`` list when one is set.  The
+autouse fixture in conftest installs a fresh list per test and, at
+teardown, fails the test if any watched callable compiled more than one
+signature — the one-compiled-signature invariant (DESIGN.md §10) is what
+keeps steady-state decode off the trace/compile path.
+"""
+from typing import Iterable, List, Tuple
+
+
+def cache_size(fn) -> int:
+    """Compiled-signature count of a jitted callable (0 if untraced or
+    the jax version exposes no counter)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return 0
+    try:
+        return int(probe())
+    except Exception:
+        return 0
+
+
+def failures(watched: Iterable[Tuple[str, object]],
+             limit: int = 1) -> List[str]:
+    """Human-readable violations: watched callables whose compile cache
+    exceeds `limit` signatures."""
+    out = []
+    for name, fn in watched:
+        n = cache_size(fn)
+        if n > limit:
+            out.append(f"{name}: {n} compiled signatures (expected "
+                       f"<= {limit})")
+    return out

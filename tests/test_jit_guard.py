@@ -1,0 +1,55 @@
+"""The recompile guard itself: cache-size probing, failure formatting,
+scheduler registration hooks, and end-to-end detection of a second
+compiled signature on a watched callable."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _jit_guard import cache_size, failures
+from repro.serving import scheduler
+
+
+class _Stub:
+    def __init__(self, n):
+        self._n = n
+
+    def _cache_size(self):
+        return self._n
+
+
+def test_failures_reports_only_over_limit():
+    watched = [("a", _Stub(1)), ("b", _Stub(2)), ("c", _Stub(0))]
+    bad = failures(watched)
+    assert len(bad) == 1
+    assert bad[0].startswith("b: 2 compiled signatures")
+
+
+def test_cache_size_handles_missing_probe():
+    assert cache_size(object()) == 0
+
+
+def test_watch_jit_registers_only_when_enabled(monkeypatch):
+    monkeypatch.setattr(scheduler, "JIT_WATCH", None)
+    scheduler._watch_jit("x", lambda: None)     # disabled: no-op
+
+    lst = []
+    monkeypatch.setattr(scheduler, "JIT_WATCH", lst)
+
+    def fn():
+        return None
+
+    scheduler._watch_jit("x", fn)
+    scheduler._watch_jit("y", None)             # absent callables skipped
+    assert lst == [("x", fn)]
+
+
+@pytest.mark.allow_recompile
+def test_guard_detects_second_signature(_jit_cache_guard):
+    f = jax.jit(lambda x: x * 2)
+    scheduler._watch_jit("toy._decode", f)
+    f(jnp.zeros((2,)))
+    assert failures(_jit_cache_guard) == []
+    f(jnp.zeros((3,)))                          # new shape -> new signature
+    bad = failures(_jit_cache_guard)
+    assert len(bad) == 1
+    assert "toy._decode" in bad[0]

@@ -1,0 +1,438 @@
+"""kvlint analyzer tests: fire/no-fire fixtures per rule, suppression
+comments, baseline round-trip, and a meta-test that the live repo is
+clean (zero non-baselined findings).
+
+Pure stdlib — these tests never import jax, so they double as the CI
+lint-job smoke test for the analyzer itself.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import kvlint
+from repro.analysis.core import RULES, run_paths
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def lint(tmp_path, files, rules=None):
+    """Write fixture files under tmp_path and run the analyzer."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_paths(sorted(files), tmp_path, rules)
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# KV001 — jit purity
+# ---------------------------------------------------------------------------
+
+KV001_FIRE = """\
+    import jax
+
+    def step(x, n):
+        if x > 0:
+            x = x + 1
+        y = x.item()
+        print(x)
+        return y
+
+    jitted = jax.jit(step, static_argnames=("n",))
+"""
+
+KV001_CLEAN = """\
+    import jax
+
+    def step(x, n, batch):
+        if n > 0:
+            x = x + 1
+        if x.shape[0] > 2:
+            x = x * 2
+        if batch is None:
+            return x
+        if "patches" in batch:
+            x = x + len(batch)
+        return x
+
+    jitted = jax.jit(step, static_argnames=("n",))
+"""
+
+
+def test_kv001_fires_on_traced_branch_item_and_print(tmp_path):
+    findings = lint(tmp_path, {"mod.py": KV001_FIRE}, ["KV001"])
+    msgs = [f.message for f in findings]
+    assert rules_of(findings) == ["KV001", "KV001", "KV001"]
+    assert any("`if`" in m or "Python `if`" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+    assert any("print" in m for m in msgs)
+
+
+def test_kv001_static_contexts_do_not_fire(tmp_path):
+    assert lint(tmp_path, {"mod.py": KV001_CLEAN}, ["KV001"]) == []
+
+
+def test_kv001_propagates_through_call_graph(tmp_path):
+    src = """\
+        import jax
+
+        def helper(v):
+            if v > 0:
+                return v + 1
+            return v
+
+        def step(x):
+            return helper(x)
+
+        jitted = jax.jit(step)
+    """
+    findings = lint(tmp_path, {"mod.py": src}, ["KV001"])
+    assert rules_of(findings) == ["KV001"]
+    assert findings[0].qualname == "helper"
+
+
+def test_kv001_lambda_default_capture_is_static(tmp_path):
+    src = """\
+        import jax
+
+        def op(x, quant):
+            if quant != "none":
+                x = x * 2
+            return x
+
+        jitted = jax.jit(lambda x_, quant="none": op(x_, quant))
+    """
+    assert lint(tmp_path, {"mod.py": src}, ["KV001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# KV002 — donation safety
+# ---------------------------------------------------------------------------
+
+KV002_FIRE = """\
+    import jax
+
+    def _step(buf, t):
+        return buf + t
+
+    step = jax.jit(_step, donate_argnums=(0,))
+
+    def drive(buf, t):
+        out = step(buf, t)
+        extra = buf + 1
+        return out, extra
+"""
+
+KV002_CLEAN = """\
+    import jax
+
+    def _step(buf, t):
+        return buf + t
+
+    step = jax.jit(_step, donate_argnums=(0,))
+
+    def drive(buf, t):
+        buf = step(buf, t)
+        return buf + 1
+"""
+
+
+def test_kv002_fires_on_read_after_donation(tmp_path):
+    findings = lint(tmp_path, {"mod.py": KV002_FIRE}, ["KV002"])
+    assert rules_of(findings) == ["KV002"]
+    assert "`buf`" in findings[0].message
+
+
+def test_kv002_rebinding_the_donated_symbol_is_safe(tmp_path):
+    assert lint(tmp_path, {"mod.py": KV002_CLEAN}, ["KV002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# KV003 — recompile hazards
+# ---------------------------------------------------------------------------
+
+KV003_LOOP_FIRE = """\
+    import jax
+
+    def g(x):
+        return x * 2
+
+    def drive(xs):
+        outs = []
+        for x in xs:
+            f = jax.jit(g)
+            outs.append(f(x))
+        return outs
+"""
+
+KV003_MIXED_FIRE = """\
+    import jax
+
+    def h(x, t):
+        return x * t
+
+    step = jax.jit(h)
+
+    def a(x):
+        return step(x, 0.5)
+
+    def b(x, t):
+        return step(x, t)
+"""
+
+KV003_CLEAN = """\
+    import jax
+
+    def h(x, t):
+        return x * t
+
+    step = jax.jit(h)
+
+    def a(x, t):
+        return step(x, t)
+
+    def b(x, t):
+        return step(x, t)
+"""
+
+
+def test_kv003_fires_on_jit_in_loop(tmp_path):
+    findings = lint(tmp_path, {"mod.py": KV003_LOOP_FIRE}, ["KV003"])
+    assert "KV003" in rules_of(findings)
+    assert any("inside a loop" in f.message for f in findings)
+
+
+def test_kv003_fires_on_mixed_literal_and_array_call_sites(tmp_path):
+    findings = lint(tmp_path, {"mod.py": KV003_MIXED_FIRE}, ["KV003"])
+    assert "KV003" in rules_of(findings)
+    assert any("second compiled signature" in f.message for f in findings)
+
+
+def test_kv003_uniform_call_sites_are_clean(tmp_path):
+    assert lint(tmp_path, {"mod.py": KV003_CLEAN}, ["KV003"]) == []
+
+
+# ---------------------------------------------------------------------------
+# KV004 — pool-write discipline
+# ---------------------------------------------------------------------------
+
+KV004_FIRE = """\
+    import jax
+
+    def bad_set(cache, val):
+        pages = cache.k_pages_g
+        return pages.at[0, 1].set(val)
+
+    def bad_dus(pool, upd):
+        return jax.lax.dynamic_update_slice(pool, upd, (0, 0, 0))
+"""
+
+KV004_CLEAN = """\
+    def fine(x, val):
+        return x.at[0].set(val)
+"""
+
+
+def test_kv004_fires_outside_paged_kv(tmp_path):
+    findings = lint(tmp_path, {"core/engine2.py": KV004_FIRE}, ["KV004"])
+    assert rules_of(findings) == ["KV004", "KV004"]
+
+
+def test_kv004_allows_writes_inside_paged_kv(tmp_path):
+    assert lint(tmp_path, {"core/paged_kv.py": KV004_FIRE},
+                ["KV004"]) == []
+
+
+def test_kv004_ignores_non_pool_arrays(tmp_path):
+    assert lint(tmp_path, {"core/engine2.py": KV004_CLEAN},
+                ["KV004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# KV005 — Pallas kernel hygiene
+# ---------------------------------------------------------------------------
+
+KV005_FIRE = """\
+    from jax.experimental import pallas as pl
+
+    def _body(x_ref, o_ref):
+        print("trace me")
+        o_ref[...] = x_ref[...]
+
+    def op(x, offs):
+        grid = (4, 4)
+        return pl.pallas_call(
+            _body,
+            grid=grid,
+            in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i + offs, j))],
+            out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            out_shape=x,
+        )(x)
+"""
+
+KV005_CLEAN = """\
+    from jax.experimental import pallas as pl
+
+    def _body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def op(x):
+        return pl.pallas_call(
+            _body,
+            grid=(4, 4),
+            in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            out_shape=x,
+            compiler_params=pl.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")),
+        )(x)
+"""
+
+
+def test_kv005_fires_on_impure_map_missing_semantics_and_print(tmp_path):
+    findings = lint(tmp_path, {"kernels/badkern.py": KV005_FIRE},
+                    ["KV005"])
+    msgs = [f.message for f in findings]
+    assert rules_of(findings) == ["KV005"] * 3
+    assert any("closes over" in m for m in msgs)
+    assert any("dimension_semantics" in m for m in msgs)
+    assert any("side-effect free" in m for m in msgs)
+
+
+def test_kv005_clean_kernel_passes(tmp_path):
+    assert lint(tmp_path, {"kernels/goodkern.py": KV005_CLEAN},
+                ["KV005"]) == []
+
+
+def test_kv005_only_scans_kernel_files(tmp_path):
+    # same impure source outside kernels/ is out of scope for KV005
+    assert lint(tmp_path, {"serving/notakern.py": KV005_FIRE},
+                ["KV005"]) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_silences_one_line(tmp_path):
+    src = """\
+        import jax
+
+        def step(x):
+            y = x.item()  # kvlint: disable=KV001
+            print(x)
+            return y
+
+        jitted = jax.jit(step)
+    """
+    findings = lint(tmp_path, {"mod.py": src}, ["KV001"])
+    assert len(findings) == 1
+    assert "print" in findings[0].message
+
+
+def test_standalone_suppression_covers_next_code_line(tmp_path):
+    src = """\
+        import jax
+
+        def step(x):
+            # kvlint: disable=KV001
+            y = x.item()
+            return y
+
+        jitted = jax.jit(step)
+    """
+    assert lint(tmp_path, {"mod.py": src}, ["KV001"]) == []
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    src = """\
+        import jax
+
+        def step(x):
+            y = x.item()  # kvlint: disable=KV004
+            return y
+
+        jitted = jax.jit(step)
+    """
+    findings = lint(tmp_path, {"mod.py": src}, ["KV001"])
+    assert rules_of(findings) == ["KV001"]
+
+
+# ---------------------------------------------------------------------------
+# CLI + baseline round-trip
+# ---------------------------------------------------------------------------
+
+def write_fixture(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text(textwrap.dedent(KV001_FIRE))
+    return p
+
+
+def test_cli_exit_codes_and_baseline_roundtrip(tmp_path, capsys):
+    write_fixture(tmp_path)
+    argv = ["mod.py", "--root", str(tmp_path), "--baseline", "bl.txt"]
+
+    assert kvlint.main(argv) == 1            # live findings, no baseline
+    assert kvlint.main(argv + ["--update-baseline"]) == 0
+    text = (tmp_path / "bl.txt").read_text()
+    assert text.count("KV001") == 3
+    capsys.readouterr()
+
+    assert kvlint.main(argv) == 0            # everything grandfathered
+    assert "baselined" in capsys.readouterr().out
+
+    # a NEW violation is not covered by the stale baseline
+    p = tmp_path / "mod.py"
+    p.write_text(p.read_text() + "\n\ndef extra(z):\n"
+                 "    return z.item()\n\n\n"
+                 "jitted2 = jax.jit(extra)\n")
+    assert kvlint.main(argv) == 1
+
+
+def test_cli_unknown_rule_is_usage_error(tmp_path, capsys):
+    write_fixture(tmp_path)
+    rc = kvlint.main(["mod.py", "--root", str(tmp_path),
+                      "--rules", "KV999", "--baseline", "none"])
+    assert rc == 2
+
+
+def test_cli_json_format(tmp_path, capsys):
+    write_fixture(tmp_path)
+    rc = kvlint.main(["mod.py", "--root", str(tmp_path),
+                      "--baseline", "none", "--format", "json"])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert len(payload) == 3
+    assert {f["rule"] for f in payload} == {"KV001"}
+    assert all(not f["baselined"] for f in payload)
+
+
+def test_baseline_key_survives_line_renumbering(tmp_path, capsys):
+    write_fixture(tmp_path)
+    argv = ["mod.py", "--root", str(tmp_path), "--baseline", "bl.txt"]
+    assert kvlint.main(argv + ["--update-baseline"]) == 0
+    # prepend an import: every finding moves down a line, keys hold
+    p = tmp_path / "mod.py"
+    p.write_text("import math\n" + p.read_text())
+    assert kvlint.main(argv) == 0
+
+
+# ---------------------------------------------------------------------------
+# meta: the live repo is clean
+# ---------------------------------------------------------------------------
+
+def test_live_repo_has_zero_nonbaselined_findings():
+    rc = kvlint.main(["src", "tests", "benchmarks",
+                      "--root", str(REPO_ROOT)])
+    assert rc == 0, "kvlint found non-baselined findings in the repo"
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_every_rule_registered(rule):
+    assert rule in RULES

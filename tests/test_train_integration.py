@@ -24,7 +24,7 @@ def test_loss_decreases():
     it = DataIterator(make_source(DataConfig(
         seq_len=64, global_batch=16, vocab_size=cfg.vocab_size)))
     first = last = None
-    for i in range(80):
+    for _ in range(80):
         state, metrics = step(state, {k: jnp.asarray(v)
                                       for k, v in next(it).items()})
         if first is None:
