@@ -53,9 +53,11 @@ SERVING_GATED_SUFFIXES = ("/wall", "/steps_to_drain",
 # accumulates — the bench itself hard-fails on output divergence,
 # accepted_per_step <= 1, a hot tier that never misses, prefetch
 # failing to beat the ablation, or the overlapped drain losing to the
-# synchronous one
+# synchronous one; serving/replicas/* rows (multi-replica router,
+# DESIGN.md §16) likewise hard-fail in-bench on token divergence, a
+# 2-replica drain that fails to beat 1 replica, or missing migrations
 SERVING_UNGATED_PREFIXES = ("serving/spec/", "serving/tiered/",
-                            "serving/async/")
+                            "serving/async/", "serving/replicas/")
 # same mechanism for kernel rows: the 100K split-page partition sweep
 # stays informational while its trajectory accumulates (the landing run
 # has no committed baseline); the correctness of the split is gated by

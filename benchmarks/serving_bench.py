@@ -78,6 +78,22 @@ indistinguishable — there is no second core for "overlap" to use.)
   serving/async/device_idle_frac      % of the overlapped drain's wall
         with NO step in flight (sync fraction in derived — the host
         time the pipeline hides; feeds flashsim.overlap_speedup)
+Multi-replica router + disaggregated prefill/decode (DESIGN.md §16):
+the routed trace drains over 1 and 2 replicas — every replica's decode
+steps occupy its OWN modeled kvnand-d device window, so aggregate
+throughput scales with fleet slot capacity while staying token-identical
+to the single-server drain; the disaggregated drain measures what a
+migration actually ships over the wire:
+
+  serving/replicas/tok_s_1, tok_s_2   aggregate modeled tok/s at 1 and
+        2 replicas (hard-fails unless 2 replicas drain in fewer router
+        steps than 1 — the scaling the fleet exists for)
+  serving/replicas/ttft_p95_1, ttft_p95_2   modeled p95 time to first
+        token at each replica count
+  serving/replicas/migration_bytes_per_req  KVEnvelope wire bytes per
+        migrated request (prefill replica -> decode replica, all
+        requests migrating)
+
   serving/async/goodput_under_sla     req/s finishing within the SLA
         (TTFT + max_new x TPOT budget) under overlap
 
@@ -284,6 +300,39 @@ def _drain(scheduler, cfg, params, eng, prompts, *, slots=SLOTS,
     total = sum(len(o.token_ids) for o in outs)
     return dt, total, server.stats, {o.uid: o.token_ids for o in outs}, \
         outs
+
+
+def _drain_router(cfg, params, eng, prompts, n, *, disaggregate=False):
+    """Drain `prompts` through a ReplicaRouter over `n` serving replicas
+    (+ a dedicated prefill replica when disaggregated).  Returns router
+    steps to drain (the fleet's modeled wall — replicas step their own
+    modeled devices in parallel), the router step at which each uid's
+    first token appeared, the per-uid token streams, and the router."""
+    from repro.serving.api import (KVNANDServer, SamplingParams,
+                                   ServerConfig)
+    from repro.serving.router import ReplicaRouter
+
+    servers = [
+        KVNANDServer(
+            ServerConfig(scheduler="interleaved", engine=eng,
+                         batch_slots=SLOTS, max_context=MAX_CONTEXT,
+                         prefill_chunk_tokens=CHUNK),
+            cfg=cfg, params=params)
+        for _ in range(n + (1 if disaggregate else 0))]
+    router = ReplicaRouter(servers, disaggregate=disaggregate)
+    sp = SamplingParams(max_new_tokens=MAX_NEW)
+    uids = [router.submit(p, sp, uid=i) for i, p in enumerate(prompts)]
+    first_step = {}
+    steps = 0
+    while router._busy():
+        for e in router.step():
+            if e.index == 0 and e.token is not None:
+                first_step.setdefault(e.uid, steps + 1)
+        steps += 1
+        if steps >= 10_000:
+            raise AssertionError("router drain did not converge")
+    outs = {u: router.output(u).token_ids for u in uids}
+    return steps, first_step, outs, router
 
 
 def _emit_latency(mode, outs):
@@ -515,6 +564,54 @@ def run():
     emit("serving/async/goodput_under_sla", met / wall_on,
          f"req/s within the {ASYNC_SLA_S:.1f}s SLA "
          f"({met}/{len(ao_on)} requests met it)")
+
+    # multi-replica router + disaggregated prefill/decode (DESIGN.md
+    # §16): same trace, 1 vs 2 replicas; each replica's decode steps
+    # occupy its own modeled kvnand-d window, so router steps-to-drain
+    # is the fleet's modeled wall.  Token streams must match the
+    # single-server drain exactly at every replica count AND through
+    # the disaggregated prefill->migrate->decode path.
+    from repro.serving.api import latency_percentile
+    rep = {}
+    for n in (1, 2):
+        rep[n] = _drain_router(cfg, params, shared, prompts, n)
+    steps_1, _, _, _ = rep[1]
+    steps_2, _, _, _ = rep[2]
+    if steps_2 >= steps_1:
+        raise AssertionError(
+            f"2 replicas did not drain in fewer router steps than 1 "
+            f"({steps_2} vs {steps_1})")
+    total = sum(len(t) for t in outs["shared"].values())
+    for n in (1, 2):
+        steps_n, first, router_outs, _ = rep[n]
+        if router_outs != outs["shared"]:
+            raise AssertionError(
+                f"router drain at {n} replicas diverged from the "
+                "single-server baseline")
+        wall_n = steps_n * dev_s
+        emit(f"serving/replicas/tok_s_{n}", total / wall_n,
+             f"modeled aggregate tok/s, {n} replica(s) x {SLOTS} slots "
+             f"({steps_n} router steps x {dev_s * 1e6:.0f} us window)")
+        ttft = [s * dev_s * 1e6 for s in first.values()]
+        emit(f"serving/replicas/ttft_p95_{n}",
+             latency_percentile(ttft, 95),
+             f"us modeled p95 TTFT over {len(ttft)} requests")
+    _, _, dis_outs, dis_router = _drain_router(cfg, params, shared,
+                                               prompts, 1,
+                                               disaggregate=True)
+    if dis_outs != outs["shared"]:
+        raise AssertionError(
+            "disaggregated prefill/decode diverged from the "
+            "single-server baseline")
+    n_mig = dis_router.stats["migrations"]
+    if n_mig != len(prompts):
+        raise AssertionError(
+            f"only {n_mig} of {len(prompts)} requests migrated")
+    emit("serving/replicas/migration_bytes_per_req",
+         dis_router.stats["migration_bytes"] / n_mig,
+         f"KVEnvelope wire bytes per migrated request "
+         f"({n_mig} migrations, retries "
+         f"{dis_router.stats['migration_retries']})")
 
 
 if __name__ == "__main__":

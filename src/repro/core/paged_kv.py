@@ -936,7 +936,12 @@ def stage_hot_slot(cache: "DecodeCache", slot, vals) -> "DecodeCache":
     """Tiered staging (DESIGN.md §13): write a promoted page's bytes into
     its freshly bound hot slot — one dynamic_update_slice per pool leaf
     named in `vals` ({leaf name: [L, K, T, dh] host bytes}).  Jit with a
-    donated `cache` so the upload lands in place."""
+    donated `cache` so the upload lands in place.
+
+    Migration import (DESIGN.md §16) reuses this writer with `slot` as a
+    flat-pool PHYSICAL page index (same page axis 2 on every shared-pool
+    leaf, global and window alike), so a KVEnvelope's page bytes splice
+    into a decode replica's pool through the one staging path."""
     upd = {}
     for name, val in vals.items():
         leaf = getattr(cache, name)
@@ -949,6 +954,25 @@ def stage_hot_slot(cache: "DecodeCache", slot, vals) -> "DecodeCache":
 # leaves whose batch axis is axis 0 (tables / ring positions / lengths);
 # pool data leaves carry the stacked-layer axis first
 _BATCH_AXIS0 = ("page_table_g", "page_table_w", "page_pos_w", "lengths")
+
+
+def import_slot_rows(cache: "DecodeCache", i, rows) -> "DecodeCache":
+    """Migration import (DESIGN.md §16): write one slot's per-sequence
+    rows into slot i of the batch cache — the `lengths` scalar, the
+    `page_pos_w` ring-base row, and recurrent-state stacks ([L, ...]
+    per-layer rows) named in `rows`.  The page-byte half of a KVEnvelope
+    import goes through `stage_hot_slot`; together they keep every
+    migration splice inside this module (KV004).  Jit with a donated
+    `cache` so the rows land in place."""
+    upd = {}
+    for name, val in rows.items():
+        leaf = getattr(cache, name)
+        v = jnp.asarray(val).astype(leaf.dtype)
+        if name in _BATCH_AXIS0:
+            upd[name] = leaf.at[i].set(v)
+        else:
+            upd[name] = leaf.at[:, i].set(v)
+    return dataclasses.replace(cache, **upd)
 
 
 def splice_slot(cache: "DecodeCache", one: "DecodeCache",

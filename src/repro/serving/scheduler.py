@@ -174,8 +174,13 @@ class Request:
     done: bool = False
     params: Optional[SamplingParams] = None
     logprobs: List[float] = dataclasses.field(default_factory=list)
-    # stop|length|capacity|aborted|deadline
+    # stop|length|capacity|aborted|deadline|migrated
     finish_reason: Optional[str] = None
+    # disaggregated prefill (serving/replica.py): a held slot prefills
+    # normally but is excluded from decode dispatch, so its KV state can
+    # migrate to a decode replica with exactly the prefill handoff token
+    # emitted — the decode replica resumes the PRNG stream at position 1
+    hold: bool = False
     priority: int = 0         # lower admits first (0 = default class)
     deadline_ts: Optional[float] = None   # monotonic; expired queued
     order: int = 0            # submit sequence (admission tiebreak)
@@ -1036,7 +1041,8 @@ class ContinuousBatcher:
             self.collect()
         self._admit()
         n_decoding = sum(1 for i, r in enumerate(self.slots)
-                         if r is not None and i not in self._prefill_live)
+                         if r is not None and i not in self._prefill_live
+                         and not r.hold)
         # a verify step processes spec_k+1 query tokens per decoding
         # slot — charge the budget what the step actually computes, so
         # prefill-chunk packing doesn't overshoot under speculation
@@ -1057,6 +1063,7 @@ class ContinuousBatcher:
                    if self.slots[i] is inf.reqs[i]}
         active = [i for i, r in enumerate(self.slots)
                   if r is not None and i not in self._prefill_live
+                  and not r.hold
                   and not self._will_finish(i, int(i in pending))]
         if active:
             if self.spec_k > 0:

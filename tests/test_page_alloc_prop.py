@@ -1,0 +1,179 @@
+"""Property test: PageAllocator against a reference-counting model.
+
+Random op sequences — alloc, share (ref), free, COW-fork, abort (free a
+whole request's references at once), and MIGRATE-IMPORT (drop a
+request's references on allocator A, re-allocate its footprint on
+allocator B, the refcount shape of `replica.import_request` +
+`finish_migrated`) — must keep the real allocator bit-identical to a
+trivial model: same refcounts, same live/free partition, no leak, no
+double-free, conservation after every abort.  Runs under
+`tests/_hypothesis_compat` (seeded sweeps when hypothesis is absent).
+"""
+import random
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.page_alloc import OutOfPages, PageAllocator
+
+TOTAL = 16
+OPS = ("alloc", "share", "free_one", "cow_fork", "abort",
+       "migrate", "check")
+
+
+class ModelAlloc:
+    """The obviously-correct model: a refcount dict, nothing else."""
+
+    def __init__(self, total):
+        self.total = total
+        self.ref = {}
+
+    def alloc(self):
+        if len(self.ref) == self.total:
+            raise OutOfPages("model full")
+        return None         # page identity is the real allocator's call
+
+    def bind(self, page):
+        assert page not in self.ref
+        self.ref[page] = 1
+
+    def share(self, page):
+        assert self.ref.get(page, 0) > 0
+        self.ref[page] += 1
+
+    def free(self, page):
+        assert self.ref.get(page, 0) > 0
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            del self.ref[page]
+
+
+def _assert_same(real: PageAllocator, model: ModelAlloc):
+    real.check()
+    live = {p for p in range(real.total) if real.refcount[p] > 0}
+    assert live == set(model.ref), (live, set(model.ref))
+    for p in model.ref:
+        assert int(real.refcount[p]) == model.ref[p], \
+            (p, int(real.refcount[p]), model.ref[p])
+    assert real.free_count == real.total - len(model.ref)
+
+
+def _run_trace(seed, n_ops):
+    rng = random.Random(seed)
+    pools = [(PageAllocator(TOTAL), ModelAlloc(TOTAL)),
+             (PageAllocator(TOTAL), ModelAlloc(TOTAL))]
+    # requests: (pool_idx, [page refs]) — one list entry per reference
+    requests = []
+    for _ in range(n_ops):
+        op = rng.choice(OPS)
+        side = rng.randrange(2)
+        real, model = pools[side]
+        if op == "alloc":
+            k = rng.randint(1, 4)
+            if real.free_count < k:
+                with pytest.raises(OutOfPages):
+                    for _ in range(real.free_count + 1):
+                        real.alloc()
+                # un-do the partial allocs of the overflow probe
+                freed = [p for p in range(real.total)
+                         if real.refcount[p] > 0
+                         and model.ref.get(p, 0) == 0]
+                real.free(freed)
+            else:
+                pages = [real.alloc_for_logical(j) for j in range(k)]
+                for p in pages:
+                    model.bind(p)
+                requests.append((side, pages))
+        elif op == "share" and requests:
+            side2, pages = rng.choice(requests)
+            real2, model2 = pools[side2]
+            p = rng.choice(pages)
+            real2.share([p])
+            model2.share(p)
+            requests.append((side2, [p]))
+        elif op == "free_one" and requests:
+            idx = rng.randrange(len(requests))
+            side2, pages = requests[idx]
+            real2, model2 = pools[side2]
+            p = pages.pop(rng.randrange(len(pages)))
+            real2.free([p])
+            model2.free(p)
+            if not pages:
+                requests.pop(idx)
+        elif op == "cow_fork" and requests:
+            # fork: share every page, then COW one shared page of the
+            # fork (exclusive ownership moves to a fresh page)
+            side2, pages = rng.choice(requests)
+            real2, model2 = pools[side2]
+            if real2.free_count == 0 or not pages:
+                continue
+            real2.share(pages)
+            for p in pages:
+                model2.share(p)
+            fork = list(pages)
+            j = rng.randrange(len(fork))
+            fresh = real2.cow(fork[j])
+            if fresh != fork[j]:
+                model2.free(fork[j])
+                model2.bind(fresh)
+            fork[j] = fresh
+            requests.append((side2, fork))
+        elif op == "abort" and requests:
+            idx = rng.randrange(len(requests))
+            side2, pages = requests.pop(idx)
+            real2, model2 = pools[side2]
+            real2.free(pages)
+            for p in pages:
+                model2.free(p)
+            _assert_same(real2, model2)     # conservation after abort
+        elif op == "migrate" and requests:
+            # import on the destination FIRST (it may refuse), release
+            # the source only after — the router's ordering
+            idx = rng.randrange(len(requests))
+            src_side, pages = requests[idx]
+            dst_side = 1 - src_side
+            reald, modeld = pools[dst_side]
+            if reald.free_count < len(pages):
+                continue        # destination backpressure: retry later
+            imported = [reald.alloc_for_logical(j)
+                        for j in range(len(pages))]
+            for p in imported:
+                modeld.bind(p)
+            reals, models = pools[src_side]
+            reals.free(pages)
+            for p in pages:
+                models.free(p)
+            requests[idx] = (dst_side, imported)
+        elif op == "check":
+            _assert_same(real, model)
+    for side, (real, model) in enumerate(pools):
+        for side2, pages in requests:
+            if side2 == side:
+                real.free(pages)
+                for p in pages:
+                    model.free(p)
+        _assert_same(real, model)
+        assert real.free_count == TOTAL, "leaked pages at drain"
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1),
+       n_ops=st.integers(min_value=1, max_value=120))
+def test_page_alloc_refcount_conservation(seed, n_ops):
+    _run_trace(seed, n_ops)
+
+
+def test_double_free_raises():
+    a = PageAllocator(4)
+    p = a.alloc()
+    a.free([p])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([p])
+
+
+def test_share_dead_page_raises():
+    a = PageAllocator(4)
+    p = a.alloc()
+    a.free([p])
+    with pytest.raises(ValueError, match="dead page"):
+        a.share([p])
